@@ -1,0 +1,83 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+"""Framework-side offload search: the paper's GA over *execution-plan*
+genes (sharding / remat / microbatching / compression) for an LM training
+step, with the compiled-artifact roofline as the fitness measurement —
+DESIGN.md §2's CompiledCostRunner verification environment.
+
+    python examples/autoplan_model.py [--arch h2o-danube-1.8b]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--generations", type=int, default=4)
+    ap.add_argument("--population", type=int, default=5)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.core.ga import Evaluation, GAConfig, run_ga
+    from repro.core.measure import CompiledCostRunner
+    from repro.dist.plan import Plan
+    from repro.dist.sharding import Rules, tree_shardings
+    from repro.launch.mesh import make_test_mesh
+    from repro.models.lm import Model, param_axes
+    from repro.train import optimizer, train_step as ts
+
+    cfg = get_config(args.arch).reduced()
+    shape = ShapeConfig("plan-search", 64, 16, "train")
+    mesh = make_test_mesh((4, 2))
+    tcfg = TrainConfig()
+    runner = CompiledCostRunner(mesh)
+
+    def evaluate(genes):
+        plan = Plan.from_genes(list(genes))
+        try:
+            rules = Rules(mesh, plan)
+            model = Model(cfg, plan, rules)
+            params_sds = jax.eval_shape(
+                model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+            p_sh = tree_shardings(rules, param_axes(cfg), params_sds)
+            opt_sds = jax.eval_shape(lambda p: optimizer.init(p, tcfg),
+                                     params_sds)
+            batch_sds = {
+                "tokens": jax.ShapeDtypeStruct(
+                    (shape.global_batch, shape.seq_len), jnp.int32),
+                "labels": jax.ShapeDtypeStruct(
+                    (shape.global_batch, shape.seq_len), jnp.int32)}
+            fn = ts.make_train_step(model, tcfg)
+            jitted = jax.jit(fn, in_shardings=(p_sh, None, None, None))
+            return runner.measure_lowered(
+                jitted, params_sds, opt_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        except Exception as e:
+            return Evaluation(time_s=float("inf"), correct=False,
+                              info={"error": repr(e)[:200]})
+
+    cards = Plan.gene_cardinalities()
+    cfg_ga = GAConfig(population=args.population,
+                      generations=args.generations, seed=0,
+                      cardinalities=cards)
+    res = run_ga(len(cards), evaluate, cfg_ga)
+    best = Plan.from_genes(list(res.best_genes))
+    print(f"\nbest plan for {args.arch} (modeled step "
+          f"{res.best_eval.time_s*1e6:.1f} us on {mesh.shape}):")
+    for name, _ in Plan.GENE_SPACE:
+        print(f"  {name:22s} = {getattr(best, name)}")
+    print(f"measured {res.n_measurements} compiled candidates")
+
+
+if __name__ == "__main__":
+    main()

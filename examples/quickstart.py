@@ -1,0 +1,56 @@
+"""Quickstart: automatic offloading of the paper's three applications to a
+mixed destination environment (paper Fig. 3 behaviour).
+
+    PYTHONPATH=src python examples/quickstart.py [--full]
+
+For each app the planner runs the six ordered verifications (FB->many-core,
+FB->GPU, FB->FPGA, loops->many-core, loops->GPU, loops->FPGA analogues),
+measures every candidate in the verification environment, checks result
+equality against the single-core reference, and picks the fastest pattern
+meeting the user target.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.apps import APPS
+from repro.core.ga import GAConfig
+from repro.core.measure import TimedRunner
+from repro.core.planner import UserTarget, plan_offload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full paper sizes (slower)")
+    ap.add_argument("--target-speedup", type=float, default=None)
+    ap.add_argument("--max-price", type=float, default=None)
+    args = ap.parse_args()
+
+    target = UserTarget(target_speedup=args.target_speedup,
+                        max_price=args.max_price)
+    for name in ("3mm", "NAS.BT", "tdFIR"):
+        app = APPS[name]()
+        inputs = app.make_inputs(seed=0, small=not args.full)
+        report = plan_offload(
+            app, target, inputs=inputs, runner=TimedRunner(repeats=1),
+            ga_cfg=GAConfig.for_gene_length(min(app.gene_length, 6),
+                                            seed=0))
+        print(f"\n=== {name} ===  single-core: "
+              f"{report.ref_time_s*1e3:.2f} ms"
+              f"{'  (early stop)' if report.early_stopped else ''}")
+        for r in report.records:
+            mark = " <== selected" if r is report.selected else ""
+            t = ("-" if r.best_time_s == float("inf")
+                 else f"{r.best_time_s*1e3:8.2f} ms")
+            print(f"  {r.order}. {r.paper_analogue:14s} {r.method:15s} "
+                  f"{t}  x{r.improvement:6.2f}  "
+                  f"(measured {r.n_measurements} patterns){mark}")
+        sel = report.selected
+        print(f"  offload pattern: "
+              f"{ {k: v for k, v in sel.choice.items() if v != 'seq'} }")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Batched serving example: prefill + greedy decode across architectures,
+including the attention-free and hybrid families.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-1.3b]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="one arch id; default: a representative trio")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    from repro.launch.serve import main as serve_main
+
+    archs = ([args.arch] if args.arch else
+             ["granite-3-2b", "mamba2-1.3b", "recurrentgemma-2b"])
+    for arch in archs:
+        serve_main(["--arch", arch, "--batch", str(args.batch),
+                    "--prompt-len", "32", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end training driver: a small LM for a few hundred steps on the
+host, through the full production stack (sharded step, deterministic data,
+fault-tolerant checkpointed loop, watchdog).
+
+    PYTHONPATH=src python examples/train_lm.py                # ~5 min CPU
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --wide
+
+--wide uses a ~100M-parameter config (the task-spec scale; sized for real
+accelerators — expect minutes/step on a 1-core CPU host).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--wide", action="store_true",
+                    help="~100M params instead of the CPU-sized default")
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    from repro.launch.train import main as train_main
+
+    argv = ["--arch", args.arch, "--reduced", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128", "--ckpt-dir", args.ckpt_dir,
+            "--save-every", "50", "--log-every", "20"]
+    if args.wide:
+        # ~100M params: widen the reduced config via a custom registry entry
+        import dataclasses
+        from repro.configs import ARCHS, get_config
+        cfg = dataclasses.replace(
+            get_config(args.arch).reduced(), d_model=768, n_layers=12,
+            n_heads=12, n_kv_heads=4, d_head=64, d_ff=3072,
+            vocab_size=32000, name=args.arch + "-100m")
+        ARCHS[cfg.name] = cfg
+        argv[1] = cfg.name
+        argv.remove("--reduced")
+        print(f"wide config: ~{cfg.n_params()/1e6:.0f}M params")
+    res = train_main(argv)
+    losses = [h["loss"] for h in res.metrics_history if "loss" in h]
+    print(f"\nfinal: loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps; restarts={res.restarts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Assemble EXPERIMENTS.md from the collected experiment artifacts.
+
+    PYTHONPATH=src python scripts/build_experiments_md.py
+"""
+import io
+import json
+import subprocess
+import sys
+from contextlib import redirect_stdout
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "experiments" / "dryrun"
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+
+def roofline_md() -> str:
+    from benchmarks import roofline
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        roofline.main()
+    return buf.getvalue()
+
+
+def dryrun_stats():
+    ok = skip = err = 0
+    compile_times = []
+    for f in DRY.glob("*.json"):
+        r = json.loads(f.read_text())
+        if r.get("plan") not in (None, "auto", "baseline"):
+            continue
+        if "skip" in r:
+            skip += 1
+        elif "error" in r:
+            err += 1
+        else:
+            ok += 1
+            compile_times.append(r["compile_s"])
+    return ok, skip, err, compile_times
+
+
+def fig3_md() -> str:
+    p = ROOT / "experiments" / "fig3_results.json"
+    if not p.exists():
+        return "(run `python -m benchmarks.run` first)\n"
+    res = json.loads(p.read_text())
+    out = ["| app | single-core | selected destination | method | time | "
+           "improvement | runner-up |", "|---|---|---|---|---|---|---|"]
+    for app, r in res.items():
+        sel = r["selected"]
+        others = sorted((x for x in r["records"]
+                         if x["best_time_s"] < 1e30
+                         and x["order"] != sel["order"]),
+                        key=lambda x: x["best_time_s"])
+        runner = (f"{others[0]['paper_analogue']}/{others[0]['method']} "
+                  f"x{others[0]['improvement']:.1f}" if others else "—")
+        out.append(
+            f"| {app} | {r['ref_time_s']*1e3:.2f} ms "
+            f"| **{sel['paper_analogue']}** | {sel['method']} "
+            f"| {sel['best_time_s']*1e3:.2f} ms "
+            f"| x{sel['improvement']:.2f} | {runner} |")
+    return "\n".join(out) + "\n"
+
+
+def modeled_md() -> str:
+    p = ROOT / "experiments" / "modeled_fig3.json"
+    if not p.exists():
+        return ""
+    rows = json.loads(p.read_text())
+    out = ["| app | destination | modeled step | dominant |",
+           "|---|---|---|---|"]
+    best = {}
+    for r in rows:
+        best.setdefault(r["app"], []).append(r)
+    for app, rs in best.items():
+        fastest = min(rs, key=lambda r: r["step_time_s"])
+        for r in rs:
+            mark = " **(selected)**" if r is fastest else ""
+            out.append(f"| {app} | {r['destination']}{mark} "
+                       f"| {r['step_time_s']*1e6:.1f} us | {r['dominant']} |")
+    return "\n".join(out) + "\n"
+
+
+def ga_md() -> str:
+    p = ROOT / "experiments" / "ga_convergence.json"
+    if not p.exists():
+        return ""
+    hist = json.loads(p.read_text())
+    out = ["| generation | best time (ms) | correct individuals |",
+           "|---|---|---|"]
+    for h in hist:
+        out.append(f"| {h['generation']} | {h['best_time_s']*1e3:.2f} "
+                   f"| {h['n_correct']}/{len(hist)} |")
+    return "\n".join(out) + "\n"
+
+
+TEMPLATE = open(ROOT / "scripts" / "experiments_template.md").read()
+
+ok, skip, err, ct = dryrun_stats()
+subs = {
+    "{n_ok}": str(ok), "{n_skip}": str(skip), "{n_err}": str(err),
+    "{compile_min}": f"{min(ct):.1f}", "{compile_max}": f"{max(ct):.1f}",
+    "{compile_mean}": f"{sum(ct)/len(ct):.1f}",
+    "{fig3}": fig3_md(), "{modeled}": modeled_md(), "{ga}": ga_md(),
+    "{roofline}": roofline_md(),
+}
+body = TEMPLATE
+for k, v in subs.items():
+    body = body.replace(k, v)
+(ROOT / "EXPERIMENTS.md").write_text(body)
+print(f"EXPERIMENTS.md written ({ok} ok / {skip} skip / {err} err cells)")

@@ -1,0 +1,9 @@
+"""The paper's three evaluated applications as offloadable JAX apps."""
+from repro.apps.mm3 import build_app as build_mm3
+from repro.apps.nasbt import build_app as build_nasbt
+from repro.apps.tdfir_app import build_app as build_tdfir
+from repro.apps import registry  # populates the FB registry on import
+
+APPS = {"3mm": build_mm3, "NAS.BT": build_nasbt, "tdFIR": build_tdfir}
+
+__all__ = ["build_mm3", "build_nasbt", "build_tdfir", "APPS", "registry"]

@@ -1,0 +1,176 @@
+"""NAS.BT-style block tridiagonal solver (paper §III.A: CLASS A 64^3 grid;
+reduced grid by default so GA measurement stays tractable on one core).
+
+Structure follows BT's ADI factorization: RHS stencil computation, then
+tridiagonal solves along x, y, z (Thomas algorithm — sequential *along* each
+line, parallel *across* lines), a Gauss-Seidel smoother, and the solution
+update.
+
+The smoother is the paper's many-core hazard made concrete: its ``dp``/``tp``
+implementations parallelize a loop-carried sweep Jacobi-style, which runs
+fast but computes a DIFFERENT result — exactly the "OpenMP compiles wrong
+parallelizations without error" failure mode.  Only the measured
+result-equality check can reject it, so the GA must learn to leave that gene
+at 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.offloadable import LoopNest, OffloadableApp
+
+GRID_FULL = 48
+GRID_SMALL = 12
+
+
+def make_inputs(seed: int = 0, small: bool = False):
+    n = GRID_SMALL if small else GRID_FULL
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.normal(key, (n, n, n), jnp.float32)
+    return {"u": u}
+
+
+def _stencil_rhs(axis):
+    def seq(state):
+        u = state["u"]
+
+        def plane(_, i):
+            # 1D 3-point stencil applied plane-by-plane (sequential outer
+            # loop, like the C triple nest)
+            um = jnp.roll(u, 1, axis)
+            up = jnp.roll(u, -1, axis)
+            sl = [slice(None)] * 3
+            sl[(axis + 1) % 3] = i
+            return None, (0.5 * u[tuple(sl)] - 0.25 * um[tuple(sl)]
+                          - 0.25 * up[tuple(sl)])
+
+        n = u.shape[(axis + 1) % 3]
+        _, planes = jax.lax.scan(plane, None, jnp.arange(n))
+        rhs = jnp.moveaxis(planes, 0, (axis + 1) % 3)
+        return dict(state, **{f"rhs{axis}": rhs})
+
+    def dp(state):
+        u = state["u"]
+        um = jnp.roll(u, 1, axis)
+        up = jnp.roll(u, -1, axis)
+        return dict(state, **{f"rhs{axis}": 0.5 * u - 0.25 * um - 0.25 * up})
+
+    return LoopNest(name=f"compute_rhs_{'xyz'[axis]}",
+                    impls={"seq": seq, "dp": dp, "tp": dp},
+                    trip_count=3, doc="RHS stencil triple nest")
+
+
+def _thomas_line(d, rhs):
+    """Thomas algorithm for tridiag(-1, d, -1) along the LAST axis."""
+    n = rhs.shape[-1]
+
+    def fwd(carry, i):
+        cp_prev, dp_prev = carry
+        denom = d - (-1.0) * cp_prev
+        cp = -1.0 / denom
+        dp = (rhs[..., i] - (-1.0) * dp_prev) / denom
+        return (cp, dp), (cp, dp)
+
+    (_, _), (cps, dps) = jax.lax.scan(
+        fwd, (jnp.zeros(rhs.shape[:-1]), jnp.zeros(rhs.shape[:-1])),
+        jnp.arange(n))
+    cps = jnp.moveaxis(cps, 0, -1)
+    dps = jnp.moveaxis(dps, 0, -1)
+
+    def bwd(x_next, i):
+        x = dps[..., i] - cps[..., i] * x_next
+        return x, x
+
+    _, xs = jax.lax.scan(bwd, jnp.zeros(rhs.shape[:-1]),
+                         jnp.arange(n - 1, -1, -1))
+    return jnp.moveaxis(xs[::-1], 0, -1)
+
+
+def _solve_nest(axis):
+    diag = 2.5
+
+    def seq(state):
+        rhs = jnp.moveaxis(state[f"rhs{axis}"], axis, -1)
+        n_lines = rhs.shape[0]
+
+        def line(_, i):
+            return None, _thomas_line(diag, rhs[i])
+
+        _, sol = jax.lax.scan(line, None, jnp.arange(n_lines))
+        sol = jnp.moveaxis(sol, -1, axis)
+        return dict(state, **{f"sol{axis}": sol})
+
+    def dp(state):
+        rhs = jnp.moveaxis(state[f"rhs{axis}"], axis, -1)
+        sol = _thomas_line(diag, rhs)       # vectorized across all lines
+        sol = jnp.moveaxis(sol, -1, axis)
+        return dict(state, **{f"sol{axis}": sol})
+
+    return LoopNest(name=f"{'xyz'[axis]}_solve",
+                    impls={"seq": seq, "dp": dp, "tp": dp},
+                    trip_count=4,
+                    doc="Thomas solve: sequential along line, parallel "
+                        "across lines")
+
+
+def _seidel_nest():
+    sweeps = 2
+
+    def seq(state):
+        u = state["u"]
+
+        def sweep(u, _):
+            def row(u, i):
+                prev = jnp.where(i > 0, u[i - 1], u[0])
+                new_row = 0.5 * u[i] + 0.25 * prev
+                return u.at[i].set(new_row), None
+            u, _ = jax.lax.scan(row, u, jnp.arange(u.shape[0]))
+            return u, None
+
+        u, _ = jax.lax.scan(sweep, u, None, length=sweeps)
+        return dict(state, u_smooth=u)
+
+    def dp(state):
+        # WRONG parallelization: Jacobi instead of Gauss-Seidel — fast,
+        # compiles fine, different answer (the paper's OpenMP hazard).
+        u = state["u"]
+        for _ in range(sweeps):
+            prev = jnp.concatenate([u[:1], u[:-1]], axis=0)
+            u = 0.5 * u + 0.25 * prev
+        return dict(state, u_smooth=u)
+
+    return LoopNest(name="seidel_relax", impls={"seq": seq, "dp": dp,
+                                                "tp": dp},
+                    parallel_safe=False, trip_count=3,
+                    doc="Gauss-Seidel sweep (loop-carried!)")
+
+
+def _update_nest():
+    def seq(state):
+        def comb(_, i):
+            return None, (state["u_smooth"][i] + state["sol0"][i]
+                          + state["sol1"][i] + state["sol2"][i])
+        _, out = jax.lax.scan(comb, None,
+                              jnp.arange(state["u"].shape[0]))
+        return dict(state, out=out)
+
+    def dp(state):
+        return dict(state, out=state["u_smooth"] + state["sol0"]
+                    + state["sol1"] + state["sol2"])
+
+    return LoopNest(name="add_update", impls={"seq": seq, "dp": dp,
+                                              "tp": dp},
+                    trip_count=3, doc="solution update")
+
+
+def build_app() -> OffloadableApp:
+    nests = [
+        _stencil_rhs(0), _stencil_rhs(1), _stencil_rhs(2),
+        _solve_nest(0), _solve_nest(1), _solve_nest(2),
+        _seidel_nest(),
+        _update_nest(),
+    ]
+    return OffloadableApp(name="NAS.BT", nests=nests,
+                          make_inputs=make_inputs,
+                          doc="block-tridiagonal ADI solver")

@@ -1,0 +1,66 @@
+"""Function-block registry ("DB") for the paper apps.
+
+Paper-faithful: one FB offload target — tdFIR (paper §III.A prepared exactly
+one "because I only need to confirm appropriate device and method
+selection").  The entry carries per-destination replacements; the Pallas
+kernel is the FPGA analogue (Intel OpenCL sample in the paper).
+
+A second, framework-side entry (attention) demonstrates the same machinery
+against model jaxprs; it is exercised by tests/examples, not by the paper
+benchmark.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.function_blocks import FunctionBlockEntry, REGISTRY
+from repro.apps import tdfir_app
+from repro.kernels import ops as kops
+
+
+def _tdfir_ref_example():
+    st = tdfir_app.make_inputs(seed=0, small=True)
+    return (st,)
+
+
+def _tdfir_ref_fn(state):
+    import jax
+    return jax.vmap(tdfir_app._fir_seq_1)(state["x_re"], state["h_re"])
+
+
+TDFIR_ENTRY = REGISTRY.register(FunctionBlockEntry(
+    name="tdfir",
+    match_names=("tdfir", "time_domain_fir"),
+    ref_fn=_tdfir_ref_fn,
+    example_args=_tdfir_ref_example,
+    impls={
+        "dp": tdfir_app._complex_fir(tdfir_app._fir_xla),
+        "tp": tdfir_app._complex_fir(tdfir_app._fir_xla),
+        "pallas": tdfir_app._complex_fir(tdfir_app._fir_pallas),
+    },
+    doc="HPEC time-domain FIR bank (paper's single FB target)",
+))
+
+
+# --- framework-side demo entry: attention -> flash kernel -----------------
+
+def _attn_example():
+    import jax
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 32, 16), jnp.float32)
+    return (q, q, q)
+
+
+def _attn_ref(q, k, v):
+    from repro.kernels import ref
+    return ref.mha_ref(q, k, v, causal=True)
+
+
+ATTENTION_ENTRY = REGISTRY.register(FunctionBlockEntry(
+    name="attention",
+    match_names=("attention", "mha", "sdpa"),
+    ref_fn=_attn_ref,
+    example_args=_attn_example,
+    impls={},          # replacement handled at the model layer (plan flag)
+    doc="softmax(QK^T)V block; flash-kernel replacement via Plan.use_pallas",
+))

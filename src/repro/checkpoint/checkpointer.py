@@ -1,0 +1,151 @@
+"""Sharded, atomic, async checkpointing with reshard-on-restore.
+
+Layout:   <dir>/step_<n>.tmp/  ->  (atomic rename)  ->  <dir>/step_<n>/
+            manifest.json        tree structure, shapes, dtypes, metadata
+            leaf_<i>.npy         one file per leaf (full/global array)
+
+Restore takes optional shardings: the full arrays are re-placed under
+whatever mesh the restoring job runs — a checkpoint written on a (2,16,16)
+mesh restores onto (16,16) or a single host unchanged (elastic restart).
+Writes can run on a background thread (``async_save``); ``wait()`` joins.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _tree_flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        tmp = self.dir / f"step_{step}.tmp"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat, treedef = _tree_flatten_with_paths(tree)
+        manifest = {
+            "step": step,
+            "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
+            if hasattr(jax.tree_util.tree_structure(tree),
+                       "serialize_using_proto") else None,
+            "n_leaves": len(flat),
+            "leaves": [],
+            "extra": extra or {},
+            "time": time.time(),
+        }
+        for i, leaf in enumerate(flat):
+            arr = np.asarray(jax.device_get(leaf))
+            true_dtype = str(arr.dtype)
+            if arr.dtype.kind == "V" or true_dtype not in (
+                    "float64", "float32", "float16", "int64", "int32",
+                    "int16", "int8", "uint64", "uint32", "uint16", "uint8",
+                    "bool", "complex64", "complex128"):
+                # ml_dtypes (bfloat16/fp8/...) don't survive np.save;
+                # store the raw bits and re-view on load
+                view = {1: np.uint8, 2: np.uint16, 4: np.uint32,
+                        8: np.uint64}[arr.dtype.itemsize]
+                np.save(tmp / f"leaf_{i}.npy", arr.view(view))
+            else:
+                np.save(tmp / f"leaf_{i}.npy", arr)
+            manifest["leaves"].append(
+                {"index": i, "shape": list(arr.shape),
+                 "dtype": true_dtype})
+        # structure via example pytree pickled as json paths
+        import pickle
+        with open(tmp / "treedef.pkl", "wb") as f:
+            pickle.dump(treedef, f)
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                       # atomic publish
+        self._gc()
+        return final
+
+    def async_save(self, step: int, tree: Any,
+                   extra: Optional[dict] = None):
+        # snapshot to host first (cheap on CPU; on TPU this is the D2H copy)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+        self.wait()
+
+        def work():
+            try:
+                self.save(step, host_tree, extra)
+            except BaseException as e:   # surfaced at next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ---------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        steps = [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                 if not p.name.endswith(".tmp")]
+        return max(steps) if steps else None
+
+    def restore(self, step: Optional[int] = None,
+                shardings: Any = None) -> tuple:
+        """Returns (tree, extra). shardings: matching pytree of NamedSharding
+        (or None leaves) — enables restore onto a different mesh."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step}"
+        manifest = json.loads((path / "manifest.json").read_text())
+        import pickle
+        with open(path / "treedef.pkl", "rb") as f:
+            treedef = pickle.load(f)
+        leaves = []
+        for i in range(manifest["n_leaves"]):
+            arr = np.load(path / f"leaf_{i}.npy")
+            want = manifest["leaves"][i]["dtype"]
+            if str(arr.dtype) != want:
+                import ml_dtypes
+                target = getattr(ml_dtypes, want, None) or np.dtype(want)
+                arr = arr.view(target)
+            leaves.append(arr)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else
+                jax.numpy.asarray(x), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree, manifest["extra"]
+
+    # --------------------------------------------------------------- gc
+    def _gc(self):
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.dir.glob("step_*")
+                       if not p.name.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)

@@ -1,0 +1,20 @@
+"""Paper core: GA-driven automatic offloading to a mixed destination
+environment (Yamato 2020), adapted to TPU execution strategies."""
+from repro.core.ga import GAConfig, GAResult, Evaluation, run_ga
+from repro.core.destinations import (Destination, MANY_CORE, GPU, FPGA,
+                                     VERIFICATION_ORDER)
+from repro.core.offloadable import LoopNest, OffloadableApp
+from repro.core.measure import TimedRunner, CompiledCostRunner
+from repro.core.planner import UserTarget, PlanReport, plan_offload
+from repro.core import (cost_model, function_blocks, hlo_analysis, intensity,
+                        jaxpr_tools, loop_offload)
+
+__all__ = [
+    "GAConfig", "GAResult", "Evaluation", "run_ga",
+    "Destination", "MANY_CORE", "GPU", "FPGA", "VERIFICATION_ORDER",
+    "LoopNest", "OffloadableApp",
+    "TimedRunner", "CompiledCostRunner",
+    "UserTarget", "PlanReport", "plan_offload",
+    "cost_model", "function_blocks", "hlo_analysis", "intensity",
+    "jaxpr_tools", "loop_offload",
+]

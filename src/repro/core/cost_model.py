@@ -1,0 +1,141 @@
+"""Three-term roofline model from a compiled XLA artifact (TPU v5e targets).
+
+``cost_analysis()`` on a post-SPMD executable reports *per-device* FLOPs and
+bytes, so the terms divide by per-chip peak numbers directly (equivalent to
+the global/chips formulation in the task spec).  Collective bytes are parsed
+from the compiled HLO text — XLA's cost model does not expose them.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link (task-spec constant)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in compiled HLO text.
+
+    Returns {op_kind: bytes, ..., "_total": total}.  Operand shapes are the
+    dtype[dims] patterns inside the op's argument list; if none parse (e.g.
+    variadic formatting), the result shape before '=' is used as fallback.
+    """
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(
+            r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(", stripped)
+        if not m:
+            continue
+        kind, phase = m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        args = stripped[m.end():]
+        # strip trailing metadata (replica_groups etc.) — operands come first
+        paren = 0
+        for i, ch in enumerate(args):
+            if ch == "(":
+                paren += 1
+            elif ch == ")":
+                if paren == 0:
+                    args = args[:i]
+                    break
+                paren -= 1
+        shapes = _SHAPE_RE.findall(args)
+        if not shapes:
+            shapes = _SHAPE_RE.findall(m.group(1))
+        total = sum(_shape_bytes(dt, dims) for dt, dims in shapes
+                    if dt in _DTYPE_BYTES)
+        out[kind] += total
+        counts[kind] += 1
+    out["_total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    out["_counts"] = counts  # type: ignore
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0          # 6*N*D (active params for MoE)
+    useful_flops_ratio: float = 0.0   # MODEL_FLOPS / (HLO_FLOPs * chips)
+    step_time_s: float = 0.0          # max of the three terms
+    roofline_fraction: float = 0.0    # useful compute time / step time
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float, *, n_chips: int,
+                   model_flops: float = 0.0) -> Roofline:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    step = max(compute_s, memory_s, collective_s)
+    useful = model_flops / (flops * n_chips) if flops else 0.0
+    useful_time = (model_flops / n_chips) / PEAK_FLOPS
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        collective_bytes_per_device=collective_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_flops_ratio=useful,
+        step_time_s=step,
+        roofline_fraction=(useful_time / step) if step else 0.0,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed.
+
+    decode shapes process global_batch tokens per step; train/prefill process
+    global_batch*seq_len.  Training includes the backward pass (the 6 factor
+    already assumes fwd+bwd: 2 fwd + 4 bwd per param per token); for pure
+    inference (prefill/decode) the right factor is 2.
+    """
+    n = cfg.active_params() if cfg.moe is not None else cfg.n_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch
+    return 2.0 * n * tokens

@@ -1,0 +1,47 @@
+"""Offloading destinations: the TPU-native mapping of {many-core CPU, GPU,
+FPGA} (DESIGN.md §2).
+
+Price ordering follows the paper ("the central price range is the ascending
+order of GPU, many core CPU and FPGA") and verification-time ordering too
+("many core CPU, GPU and FPGA"); both are configurable because the planner's
+early-stop logic consumes them, not their absolute values.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+
+@dataclass(frozen=True)
+class Destination:
+    key: str              # impl key inside LoopNest.impls
+    name: str
+    paper_analogue: str
+    price: float          # relative $ (paper ordering: GPU < many-core < FPGA)
+    verify_time: float    # relative verification cost (CPU < GPU < FPGA)
+
+
+MANY_CORE = Destination(key="dp", name="xla_dp",
+                        paper_analogue="many-core CPU",
+                        price=1.2, verify_time=1.0)
+GPU = Destination(key="tp", name="sharded_tp", paper_analogue="GPU",
+                  price=1.0, verify_time=1.5)
+FPGA = Destination(key="pallas", name="pallas_kernel",
+                   paper_analogue="FPGA",
+                   price=2.0, verify_time=10.0)
+
+ALL: List[Destination] = [MANY_CORE, GPU, FPGA]
+BY_NAME: Dict[str, Destination] = {d.name: d for d in ALL}
+BY_ANALOGUE: Dict[str, Destination] = {d.paper_analogue: d for d in ALL}
+
+# Paper §II.C verification order: FB first (can be faster when a match
+# exists), FPGA last (slowest to verify); within each method: many-core CPU,
+# GPU, FPGA.
+VERIFICATION_ORDER = [
+    (MANY_CORE, "function_block"),
+    (GPU, "function_block"),
+    (FPGA, "function_block"),
+    (MANY_CORE, "loop"),
+    (GPU, "loop"),
+    (FPGA, "loop"),
+]

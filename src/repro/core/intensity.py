@@ -1,0 +1,76 @@
+"""FPGA-analogue narrowing (paper [40], §III.A): before any expensive
+kernel "synthesis", candidates are narrowed by arithmetic intensity and loop
+count, then by resource efficiency; only a handful of patterns are measured.
+
+Resource budget is the TPU adaptation: VMEM working set instead of FPGA
+LUT/DSP count (16 MiB VMEM per v5e core).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+from repro.core import jaxpr_tools
+from repro.core.offloadable import LoopNest, OffloadableApp
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+@dataclass
+class NestProfile:
+    nest: LoopNest
+    flops: float
+    bytes: float
+    intensity: float        # FLOPs / byte
+    resource: float         # working-set bytes (VMEM proxy)
+    efficiency: float       # intensity / resource
+    fits_vmem: bool
+
+
+def profile_nests(app: OffloadableApp, small_state) -> List[NestProfile]:
+    """Profile each nest on the state it actually receives (nests are a
+    chain: run upstream seq impls to materialize intermediate state)."""
+    import jax
+    out = []
+    state = dict(small_state)
+    for nest in app.nests:
+        try:
+            fl = jaxpr_tools.flop_estimate(nest.impls["seq"], state)
+            by = jaxpr_tools.byte_estimate(nest.impls["seq"], state)
+            state = jax.jit(nest.impls["seq"])(state)
+        except Exception:
+            fl, by = 0.0, 1.0
+        by = max(by, 1.0)
+        inten = fl / by
+        res = by
+        out.append(NestProfile(
+            nest=nest, flops=fl, bytes=by, intensity=inten, resource=res,
+            efficiency=inten / max(res, 1.0),
+            fits_vmem=res <= VMEM_BUDGET_BYTES))
+    return out
+
+
+def narrow(app: OffloadableApp, small_state, top_intensity: int = 5,
+           top_efficiency: int = 3) -> List[NestProfile]:
+    """Paper's two-stage narrowing: arithmetic intensity + loop count first,
+    then resource efficiency — returns <= top_efficiency candidates."""
+    profiles = profile_nests(app, small_state)
+    # stage 1: intensity * loop-count ranking (paper: "arithmetic intensity
+    # and loop count with ROSE and gcov")
+    stage1 = sorted(profiles,
+                    key=lambda p: p.intensity * max(p.nest.trip_count, 1),
+                    reverse=True)[:top_intensity]
+    # stage 2: resource efficiency
+    stage2 = sorted(stage1, key=lambda p: p.efficiency,
+                    reverse=True)[:top_efficiency]
+    return stage2
+
+
+def fpga_patterns(candidates: List[NestProfile]) -> List[tuple]:
+    """Paper §III.A: measure the top-3 single-nest patterns, then one combo
+    of the two best performers => at most 4 measured patterns.
+
+    Returns a list of tuples of nest names; the combo is appended by the
+    caller after the singles are measured.
+    """
+    return [(p.nest.name,) for p in candidates]

@@ -1,0 +1,149 @@
+"""jaxpr walking and Deckard-style structural fingerprints.
+
+The paper's function-block discovery [41] uses DB name matching plus Deckard
+(AST clone detection).  The jaxpr analogue: a block's "AST" is its primitive
+sequence (recursively flattened through pjit/scan/cond sub-jaxprs) with
+shapes abstracted to ranks; fingerprints are hashed n-grams of that sequence
+and similarity is Jaccard over fingerprint sets.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Sequence, Set
+
+import jax
+import numpy as np
+
+
+def jaxpr_of(fn, *example_args) -> jax.extend.core.Jaxpr:
+    return jax.make_jaxpr(fn)(*example_args).jaxpr
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from _iter_eqns(sub)
+
+
+def _sub_jaxprs(v):
+    from jax.extend.core import Jaxpr, ClosedJaxpr
+    if isinstance(v, ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for e in v:
+            yield from _sub_jaxprs(e)
+
+
+def prim_sequence(jaxpr, with_shapes: bool = False) -> List[str]:
+    """Flattened primitive-name sequence; shapes abstracted to ranks."""
+    out = []
+    for eqn in _iter_eqns(jaxpr):
+        tok = eqn.primitive.name
+        if with_shapes:
+            ranks = ",".join(str(getattr(v.aval, "ndim", 0))
+                             for v in eqn.outvars)
+            tok = f"{tok}#{ranks}"
+        out.append(tok)
+    return out
+
+
+def count_prims(jaxpr) -> dict:
+    out: dict = {}
+    for eqn in _iter_eqns(jaxpr):
+        out[eqn.primitive.name] = out.get(eqn.primitive.name, 0) + 1
+    return out
+
+
+def fingerprint(seq: Sequence[str], n: int = 3) -> Set[int]:
+    """Hashed n-grams of the primitive sequence (Deckard vector analogue)."""
+    if len(seq) < n:
+        return {hash(tuple(seq))}
+    return {hash(tuple(seq[i:i + n])) for i in range(len(seq) - n + 1)}
+
+
+def similarity(fp_a: Set[int], fp_b: Set[int]) -> float:
+    """Jaccard similarity of two fingerprint sets in [0, 1]."""
+    if not fp_a or not fp_b:
+        return 0.0
+    return len(fp_a & fp_b) / len(fp_a | fp_b)
+
+
+def fn_fingerprint(fn, *example_args, n: int = 3) -> Set[int]:
+    return fingerprint(prim_sequence(jaxpr_of(fn, *example_args),
+                                     with_shapes=True), n=n)
+
+
+def _eqn_trip_count(eqn) -> float:
+    """Loop multiplicity of an eqn's sub-jaxprs (scan length; while=1)."""
+    if eqn.primitive.name == "scan":
+        return float(eqn.params.get("length", 1) or 1)
+    return 1.0
+
+
+def _flops_of_jaxpr(jaxpr) -> float:
+    flops = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        mult = _eqn_trip_count(eqn)
+        subs = [s for v in eqn.params.values() for s in _sub_jaxprs(v)]
+        if subs:
+            for s in subs:
+                flops += mult * _flops_of_jaxpr(s)
+            continue
+        if name == "dot_general":
+            dims = eqn.params["dimension_numbers"]
+            (lc, _), _ = dims
+            lhs = eqn.invars[0].aval
+            out_elems = float(np.prod(eqn.outvars[0].aval.shape) or 1.0)
+            k = float(np.prod([lhs.shape[i] for i in lc]) or 1.0)
+            flops += 2.0 * out_elems * k
+        elif name == "conv_general_dilated":
+            out_elems = float(np.prod(eqn.outvars[0].aval.shape) or 1.0)
+            rhs = eqn.invars[1].aval
+            flops += 2.0 * out_elems * float(np.prod(rhs.shape[1:]) or 1.0)
+        else:
+            if eqn.outvars and hasattr(eqn.outvars[0].aval, "shape"):
+                flops += float(np.prod(eqn.outvars[0].aval.shape) or 1.0)
+    return flops
+
+
+def flop_estimate(fn, *example_args) -> float:
+    """Analytic FLOP estimate from the jaxpr — scan bodies multiplied by
+    their trip count (dots dominate)."""
+    return _flops_of_jaxpr(jaxpr_of(fn, *example_args))
+
+
+def byte_estimate(fn, *example_args) -> float:
+    """Bytes of inputs actually read + outputs written (working-set proxy).
+
+    Unused invars (pass-through state in chained apps) are excluded.
+    """
+    jx = jax.make_jaxpr(fn)(*example_args)
+    jaxpr = jx.jaxpr
+    used = set()
+
+    def mark(jpr):
+        for eqn in jpr.eqns:
+            for v in eqn.invars:
+                used.add(id(v))
+            for pv in eqn.params.values():
+                for s in _sub_jaxprs(pv):
+                    mark(s)
+    mark(jaxpr)
+
+    total = 0.0
+    for v in jaxpr.invars:
+        if id(v) in used and hasattr(v.aval, "shape"):
+            total += float(np.prod(v.aval.shape) or 1.0) * \
+                v.aval.dtype.itemsize
+    invar_ids = {id(v) for v in jaxpr.invars}
+    for v in jaxpr.outvars:
+        if id(v) in invar_ids:
+            continue                       # pass-through, not produced here
+        aval = getattr(v, "aval", None)
+        if aval is not None and hasattr(aval, "shape"):
+            total += float(np.prod(aval.shape) or 1.0) * aval.dtype.itemsize
+    return total

@@ -1,0 +1,108 @@
+"""Verification environment: dynamic measurement of candidate patterns.
+
+Two runners (DESIGN.md §2 "verification environment"):
+
+  * :class:`TimedRunner` — actually executes the candidate on this machine,
+    times it (best-of-k after a compile warmup), and applies the paper's
+    result-equality check: a result differing from the un-offloaded
+    reference, or a timeout, sets processing time to 1000 s so the pattern
+    dies out of the GA.
+
+  * :class:`CompiledCostRunner` — lowers + compiles the candidate for a
+    production mesh and scores it with the three-term roofline from the
+    loop-aware HLO analysis.  Dynamic in the paper's sense (the measured
+    object is the artifact the toolchain actually produced), used where the
+    workload cannot run on the verification machine (pod-scale models).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.ga import Evaluation
+from repro.core import cost_model
+from repro.core.hlo_analysis import analyze_hlo
+
+
+def outputs_close(a, b, rtol=1e-2, atol=1e-2) -> bool:
+    try:
+        la = jax.tree.leaves(a)
+        lb = jax.tree.leaves(b)
+        if len(la) != len(lb):
+            return False
+        for x, y in zip(la, lb):
+            x = np.asarray(x, dtype=np.float64)
+            y = np.asarray(y, dtype=np.float64)
+            if x.shape != y.shape:
+                return False
+            if not np.allclose(x, y, rtol=rtol, atol=atol, equal_nan=False):
+                return False
+            if not np.isfinite(x).all():
+                return False
+        return True
+    except Exception:
+        return False
+
+
+class TimedRunner:
+    def __init__(self, timeout_s: float = 180.0, rtol: float = 1e-2,
+                 atol: float = 1e-2, repeats: int = 3):
+        self.timeout_s = timeout_s
+        self.rtol = rtol
+        self.atol = atol
+        self.repeats = repeats
+
+    def measure(self, fn: Callable, inputs, reference_out) -> Evaluation:
+        jfn = jax.jit(fn)
+        try:
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(jfn(inputs))      # compile + run
+            first = time.perf_counter() - t0
+            if first > self.timeout_s:
+                return Evaluation(time_s=first, correct=False,
+                                  timed_out=True)
+            times = []
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(jfn(inputs))
+                times.append(time.perf_counter() - t0)
+            correct = outputs_close(out, reference_out, self.rtol, self.atol)
+            return Evaluation(time_s=min(times), correct=correct,
+                              info={"first_call_s": first})
+        except Exception as e:   # compile error == paper's "conversion fails"
+            return Evaluation(time_s=float("inf"), correct=False,
+                              info={"error": repr(e)[:500]})
+
+
+class CompiledCostRunner:
+    def __init__(self, mesh=None, n_chips: Optional[int] = None,
+                 model_flops: float = 0.0):
+        self.mesh = mesh
+        self.n_chips = n_chips or (mesh.size if mesh is not None else 1)
+        self.model_flops = model_flops
+
+    def measure_lowered(self, jitted, *args_sds) -> Evaluation:
+        try:
+            t0 = time.perf_counter()
+            compiled = jitted.lower(*args_sds).compile()
+            verify_s = time.perf_counter() - t0
+            analyzed = analyze_hlo(compiled.as_text())
+            rl = cost_model.roofline_terms(
+                analyzed["flops"], analyzed["bytes"],
+                analyzed["collective_bytes"], n_chips=self.n_chips,
+                model_flops=self.model_flops)
+            return Evaluation(time_s=rl.step_time_s, correct=True,
+                              info={"roofline": rl.to_dict(),
+                                    "verify_s": verify_s})
+        except Exception as e:
+            return Evaluation(time_s=float("inf"), correct=False,
+                              info={"error": repr(e)[:500]})
+
+    def measure(self, fn: Callable, inputs_sds, in_shardings=None
+                ) -> Evaluation:
+        jitted = (jax.jit(fn, in_shardings=in_shardings)
+                  if in_shardings is not None else jax.jit(fn))
+        return self.measure_lowered(jitted, inputs_sds)

@@ -1,0 +1,175 @@
+"""Mixed-offloading-destination planner (paper §II.C) — the paper's main
+contribution.
+
+Runs the six verifications in the paper's order:
+  ① FB→many-core  ② FB→GPU  ③ FB→FPGA  ④ loops→many-core  ⑤ loops→GPU
+  ⑥ loops→FPGA
+with:
+  * early stop as soon as a pattern meets the user's performance and price
+    targets,
+  * the residual rule — once a function block is offloaded, the loop
+    verifications search only the remaining nests,
+  * the FPGA-analogue loop search using intensity narrowing instead of a GA.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core import function_blocks, loop_offload
+from repro.core.destinations import (Destination, VERIFICATION_ORDER)
+from repro.core.ga import GAConfig
+from repro.core.measure import TimedRunner
+
+
+@dataclass
+class UserTarget:
+    target_speedup: Optional[float] = None     # vs single-core reference
+    target_time_s: Optional[float] = None
+    max_price: Optional[float] = None
+
+    def met(self, time_s: float, ref_time_s: float, price: float) -> bool:
+        perf_ok = True
+        if self.target_speedup is not None:
+            perf_ok = perf_ok and (ref_time_s / max(time_s, 1e-12)
+                                   >= self.target_speedup)
+        if self.target_time_s is not None:
+            perf_ok = perf_ok and time_s <= self.target_time_s
+        if self.target_speedup is None and self.target_time_s is None:
+            perf_ok = False     # nothing requested => never early-stop
+        price_ok = self.max_price is None or price <= self.max_price
+        return perf_ok and price_ok
+
+
+@dataclass
+class VerificationRecord:
+    order: int
+    destination: str
+    paper_analogue: str
+    method: str                     # function_block | loop
+    best_time_s: float
+    improvement: float              # ref_time / best_time
+    price: float
+    n_measurements: int
+    verify_elapsed_s: float
+    met_target: bool
+    choice: Dict[str, str] = field(default_factory=dict)
+    note: str = ""
+
+
+@dataclass
+class PlanReport:
+    app: str
+    ref_time_s: float
+    records: List[VerificationRecord]
+    selected: Optional[VerificationRecord]
+    early_stopped: bool
+
+    def summary_rows(self):
+        rows = []
+        for r in self.records:
+            rows.append({
+                "app": self.app, "order": r.order,
+                "destination": r.paper_analogue, "method": r.method,
+                "time_s": round(r.best_time_s, 6),
+                "improvement": round(r.improvement, 2),
+                "price": r.price, "n_meas": r.n_measurements,
+                "selected": self.selected is r,
+            })
+        return rows
+
+
+def plan_offload(app, targets: UserTarget, *, seed: int = 0,
+                 runner: Optional[TimedRunner] = None,
+                 ga_cfg: Optional[GAConfig] = None,
+                 small_state=None, inputs=None,
+                 registry=None) -> PlanReport:
+    runner = runner or TimedRunner()
+    if inputs is None:
+        inputs = app.make_inputs(seed=seed)
+    if small_state is None:
+        small_state = app.make_inputs(seed=seed, small=True)
+
+    # single-core reference (paper's "processing time by a single core")
+    ref_fn = app.reference_fn()
+    ref_eval = runner.measure(ref_fn, inputs, None)
+    import jax
+    ref_out = jax.jit(ref_fn)(inputs)
+    ref_time = ref_eval.time_s
+
+    # FB discovery once (name match + similarity), per paper [41]
+    matches = function_blocks.detect(
+        app, small_state, registry=registry or function_blocks.REGISTRY)
+
+    records: List[VerificationRecord] = []
+    fb_fixed: Dict[str, str] = {}       # residual rule state
+    early = False
+
+    for order, (dest, method) in enumerate(VERIFICATION_ORDER, start=1):
+        t0 = time.perf_counter()
+        if method == "function_block":
+            choice = function_blocks.apply_matches(app, matches, dest.key)
+            if choice is None:
+                records.append(VerificationRecord(
+                    order=order, destination=dest.name,
+                    paper_analogue=dest.paper_analogue, method=method,
+                    best_time_s=float("inf"), improvement=0.0,
+                    price=dest.price, n_measurements=0,
+                    verify_elapsed_s=time.perf_counter() - t0,
+                    met_target=False, note="no offloadable function block"))
+                continue
+            ev = runner.measure(app.build(choice), inputs, ref_out)
+            rec = VerificationRecord(
+                order=order, destination=dest.name,
+                paper_analogue=dest.paper_analogue, method=method,
+                best_time_s=ev.effective_time,
+                improvement=ref_time / max(ev.effective_time, 1e-12),
+                price=dest.price, n_measurements=1,
+                verify_elapsed_s=time.perf_counter() - t0,
+                met_target=targets.met(ev.effective_time, ref_time,
+                                       dest.price),
+                choice=dict(choice),
+                note="; ".join(f"{m.entry.name}@{m.nest.name}({m.method}"
+                               f":{m.score:.2f})" for m in matches))
+            records.append(rec)
+        else:
+            if dest.key == "pallas":
+                res = loop_offload.fpga_search(
+                    app, dest, runner, inputs, ref_out, small_state,
+                    fixed_choice=fb_fixed)
+            else:
+                res = loop_offload.ga_search(
+                    app, dest, runner, inputs, ref_out,
+                    fixed_choice=fb_fixed, ga_cfg=ga_cfg, seed=seed)
+            rec = VerificationRecord(
+                order=order, destination=dest.name,
+                paper_analogue=dest.paper_analogue, method=method,
+                best_time_s=res.best_time_s,
+                improvement=ref_time / max(res.best_time_s, 1e-12),
+                price=dest.price, n_measurements=res.n_measurements,
+                verify_elapsed_s=res.verify_elapsed_s,
+                met_target=targets.met(res.best_time_s, ref_time,
+                                       dest.price),
+                choice=dict(res.best_choice), note=res.note)
+            records.append(rec)
+
+        if rec.met_target:
+            early = True
+            break
+
+        # residual rule: after the FB verifications (first three), pin the
+        # best FB pattern before loop searches begin.
+        if order == 3:
+            fb_recs = [r for r in records
+                       if r.method == "function_block"
+                       and r.best_time_s < float("inf")]
+            if fb_recs:
+                best_fb = min(fb_recs, key=lambda r: r.best_time_s)
+                if best_fb.best_time_s < ref_time:
+                    fb_fixed = dict(best_fb.choice)
+
+    done = [r for r in records if r.best_time_s < float("inf")]
+    selected = min(done, key=lambda r: r.best_time_s) if done else None
+    return PlanReport(app=app.name, ref_time_s=ref_time, records=records,
+                      selected=selected, early_stopped=early)

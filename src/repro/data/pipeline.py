@@ -1,0 +1,96 @@
+"""Deterministic, shardable, checkpointable synthetic data pipeline.
+
+Batches are a pure function of (seed, step) — the pipeline state is just the
+step counter, so checkpoint/restore and elastic re-sharding are trivial and
+exactly reproducible.  The token stream follows a noisy affine recurrence
+(token_{t+1} = a*token_t + c + eps mod V), so a language model has real
+structure to learn and training loss visibly decreases.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.05
+    # modality stubs
+    n_img_tokens: int = 0
+    n_frames: int = 0
+    d_model: int = 0
+
+
+class SyntheticTokens:
+    """Stateless-by-construction LM data pipeline."""
+
+    def __init__(self, cfg: DataConfig, sharding=None):
+        self.cfg = cfg
+        self.sharding = sharding
+        self._gen = jax.jit(self._make_batch, static_argnums=())
+
+    def _make_batch(self, step):
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+        k0, k1, k2 = jax.random.split(key, 3)
+        start = jax.random.randint(k0, (cfg.global_batch, 1), 0,
+                                   cfg.vocab_size)
+        a, c = 31, 17
+
+        def step_fn(tok, eps):
+            nxt = (a * tok + c + eps) % cfg.vocab_size
+            return nxt, nxt
+
+        eps = (jax.random.uniform(k1, (cfg.seq_len, cfg.global_batch, 1))
+               < cfg.noise).astype(jnp.int32) * \
+            jax.random.randint(k2, (cfg.seq_len, cfg.global_batch, 1), 0,
+                               cfg.vocab_size)
+        _, toks = jax.lax.scan(step_fn, start, eps)
+        toks = jnp.swapaxes(toks[..., 0], 0, 1)        # [B, S]
+        tokens = toks[:, :-1] if cfg.seq_len > 1 else toks
+        labels = toks[:, 1:] if cfg.seq_len > 1 else toks
+        # keep [B, seq_len] by regenerating length seq_len+1 semantics:
+        tokens = jnp.pad(tokens, ((0, 0), (0, 1)))[:, :cfg.seq_len]
+        labels = jnp.pad(labels, ((0, 0), (0, 1)))[:, :cfg.seq_len]
+        batch = {"tokens": tokens, "labels": labels}
+        if cfg.n_img_tokens:
+            batch["img_embed"] = jax.random.normal(
+                k1, (cfg.global_batch, cfg.n_img_tokens, cfg.d_model),
+                jnp.float32)
+        if cfg.n_frames:
+            batch["frames"] = jax.random.normal(
+                k2, (cfg.global_batch, cfg.n_frames, cfg.d_model),
+                jnp.float32)
+        return batch
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        b = self._gen(jnp.int32(step))
+        if self.sharding is not None:
+            b = {k: jax.device_put(v, self.sharding[k])
+                 if k in self.sharding else v for k, v in b.items()}
+        return b
+
+    # --- checkpointable state ---
+    def state_dict(self, step: int) -> dict:
+        return {"step": int(step), "seed": self.cfg.seed}
+
+    @staticmethod
+    def resume_step(state: dict) -> int:
+        return int(state["step"])
+
+
+def data_config_for(cfg, shape, seed=0) -> DataConfig:
+    return DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+        global_batch=shape.global_batch, seed=seed,
+        n_img_tokens=cfg.n_img_tokens if cfg.family == "vlm" else 0,
+        n_frames=cfg.n_frames if cfg.family == "audio" else 0,
+        d_model=cfg.d_model)

@@ -1,0 +1,51 @@
+"""jit'd wrappers for the Pallas kernels + the interpret/compiled switch.
+
+``mode``: "off" (pure-jnp reference path), "interpret" (Pallas interpreter —
+the CPU-validated path used everywhere in this container), "compiled" (real
+TPU lowering; flip on hardware).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import tdfir as _fir
+from repro.kernels import ref
+
+
+def _interpret(mode: str) -> bool:
+    if mode == "compiled":
+        return False
+    return True
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_m", "block_n",
+                                             "block_k"))
+def matmul(a, b, mode: str = "interpret", block_m: int = 128,
+           block_n: int = 128, block_k: int = 128):
+    if mode == "off":
+        return ref.matmul_ref(a, b)
+    return _mm.matmul(a, b, block_m=block_m, block_n=block_n,
+                      block_k=block_k, interpret=_interpret(mode))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_n"))
+def tdfir(x, h, mode: str = "interpret", block_n: int = 512):
+    if mode == "off":
+        return ref.tdfir_ref(x, h)
+    return _fir.tdfir(x, h, block_n=block_n, interpret=_interpret(mode))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "causal", "block_q",
+                                             "block_kv"))
+def flash_attention(q, k, v, mode: str = "interpret", causal: bool = True,
+                    block_q: int = 512, block_kv: int = 512):
+    if mode == "off":
+        return ref.mha_ref(q, k, v, causal=causal)
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_kv=block_kv,
+                               interpret=_interpret(mode))

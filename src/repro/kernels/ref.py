@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32),
+                   b.astype(jnp.float32)).astype(a.dtype)
+
+
+def tdfir_ref(x: jax.Array, h: jax.Array) -> jax.Array:
+    """Causal per-filter FIR: y[f,n] = sum_k h[f,k] x[f,n-k]."""
+    f, n = x.shape
+    k = h.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0)))
+    # y[f, n] = sum_k h[f, k] * xp[f, n + (k-1) - k]
+    def tap(kk, acc):
+        seg = jax.lax.dynamic_slice(xp, (0, k - 1 - kk), (f, n))
+        hk = jax.lax.dynamic_slice(h, (0, kk), (f, 1))
+        return acc + hk * seg
+    y = jax.lax.fori_loop(0, k, tap, jnp.zeros_like(x, jnp.float32))
+    return y.astype(x.dtype)
+
+
+def tdfir_complex_ref(x_re, x_im, h_re, h_im):
+    rr = tdfir_ref(x_re, h_re)
+    ii = tdfir_ref(x_im, h_im)
+    ri = tdfir_ref(x_re, h_im)
+    ir = tdfir_ref(x_im, h_re)
+    return rr - ii, ri + ir
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+            causal: bool = True) -> jax.Array:
+    """q [BH, Sq, D], k/v [BH, Skv, D]."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(q.dtype), v)

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell the full-size step function (train_step / prefill / serve_step)
+is lowered with ShapeDtypeStruct inputs and compiled for the production mesh;
+``memory_analysis()`` proves the per-device footprint, ``cost_analysis()`` +
+HLO collective parsing feed the §Roofline terms.  Results are cached as JSON
+under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  python -m repro.launch.dryrun --all             # driver: subprocess/cell
+  python -m repro.launch.dryrun --all --mesh multi
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def default_plan(cfg, shape, plan_name: str = "auto",
+                 overrides: dict = None):
+    """Baseline per-cell plan (recorded in EXPERIMENTS.md as the baseline).
+
+    `overrides` (from --plan-json) patches arbitrary Plan fields on top of
+    the auto baseline — the §Perf hillclimb mechanism.
+    """
+    from repro.dist.plan import Plan
+    import dataclasses as dc
+    if plan_name not in ("auto", "baseline") and not overrides:
+        from repro.dist import plan as plan_mod
+        named = {p.name: p for p in vars(plan_mod).values()
+                 if isinstance(p, Plan)}
+        if plan_name in named:
+            return named[plan_name]
+    kw = {}
+    if shape.kind != "train":
+        kw["remat"] = "none"
+    if shape.kind == "decode":
+        kw["decode_kv_seq_shard"] = True
+    if cfg.padded_vocab >= 100_000:
+        kw["vocab_chunk"] = 512
+    name = "auto-baseline"
+    if overrides:
+        kw.update(overrides)
+        name = plan_name if plan_name not in ("auto", "baseline") \
+            else "override"
+    return Plan(name=name, **kw)
+
+
+def build_step(cfg, shape, mesh, plan):
+    """Returns (fn, example_args_SDS, in_shardings, donate)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as SDS
+
+    from repro.configs.base import TrainConfig
+    from repro.dist.sharding import Rules, tree_shardings
+    from repro.launch import specs
+    from repro.models.lm import Model, param_axes, cache_axes
+    from repro.train import optimizer, train_step as ts
+
+    rules = Rules(mesh, plan)
+    model = Model(cfg, plan, rules)
+    key_sds = SDS((2,), jnp.uint32)
+    params_sds = jax.eval_shape(
+        lambda k: model.init(k), key_sds)
+    p_axes = param_axes(cfg)
+    params_sh = tree_shardings(rules, p_axes, params_sds)
+    batch_sds = specs.batch_specs(cfg, shape)
+    b_axes = specs.logical_batch_axes(cfg, shape)
+    batch_sh = {k: rules.sharding(b_axes[k], batch_sds[k].shape)
+                for k in batch_sds}
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(microbatches=plan.microbatches,
+                           master_dtype=plan.opt_state_dtype)
+        opt_sds = jax.eval_shape(lambda p: optimizer.init(p, tcfg),
+                                 params_sds)
+        o_axes = optimizer.opt_state_axes(p_axes, tcfg)
+        opt_sh = tree_shardings(rules, o_axes, opt_sds)
+        fn = ts.make_train_step(model, tcfg)
+        args = (params_sds, opt_sds, batch_sds, SDS((), jnp.int32))
+        shardings = (params_sh, opt_sh, batch_sh, None)
+        return fn, args, shardings, (0, 1)
+    if shape.kind == "prefill":
+        fn = ts.make_prefill_step(model, cache_len=shape.seq_len)
+        args = (params_sds, batch_sds)
+        return fn, args, (params_sh, batch_sh), ()
+    # decode
+    cache_sds = specs.cache_specs(cfg, shape, plan)
+    c_axes = cache_axes(cfg, quant=plan.kv_cache_quant)
+    cache_sh = tree_shardings(rules, c_axes, cache_sds)
+    fn = ts.make_serve_step(model)
+    args = (params_sds, cache_sds, batch_sds["tokens"], SDS((), jnp.int32))
+    shardings = (params_sh, cache_sh, batch_sh["tokens"], None)
+    return fn, args, shardings, (1,)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             plan_name: str = "auto", out_dir: Path = OUT_DIR,
+             overrides: dict = None) -> dict:
+    import jax
+    from repro.configs import get_config, get_shape, cell_runnable
+    from repro.core import cost_model
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "plan": plan_name}
+    if not cell_runnable(cfg, shape):
+        result["skip"] = ("long_500k needs sub-quadratic attention; "
+                          f"{arch} is pure full-attention (see DESIGN.md)")
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    plan = default_plan(cfg, shape, plan_name, overrides)
+    result["plan_detail"] = dataclasses.asdict(plan)
+
+    t0 = time.time()
+    fn, args, shardings, donate = build_step(cfg, shape, mesh, plan)
+    jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    from repro.core.hlo_analysis import analyze_hlo
+    analyzed = analyze_hlo(hlo)      # loop-aware per-device costs
+    mf = cost_model.model_flops_for(cfg, shape)
+    rl = cost_model.roofline_terms(
+        analyzed["flops"], analyzed["bytes"],
+        analyzed["collective_bytes"],
+        n_chips=n_chips, model_flops=mf)
+
+    result.update({
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "xla_cost_analysis": {k: float(v) for k, v in ca.items()
+                              if isinstance(v, (int, float))
+                              and ("flops" in k or k == "bytes accessed")},
+        "hlo_analysis": {k: float(v) for k, v in analyzed.items()},
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "collectives": {k.replace("coll_", ""): v
+                        for k, v in analyzed.items()
+                        if k.startswith("coll_")},
+        "collective_counts": {k.replace("count_", ""): v
+                              for k, v in analyzed.items()
+                              if k.startswith("count_")},
+        "roofline": rl.to_dict(),
+        "fits_16GiB": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                       + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        < 16 * 1024**3,
+    })
+    return result
+
+
+def cell_path(out_dir: Path, arch, shape, mesh_kind, plan_name) -> Path:
+    tag = f"{arch}__{shape}__{mesh_kind}"
+    if plan_name not in ("auto", "baseline"):
+        tag += f"__{plan_name}"
+    return out_dir / f"{tag}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--plan", default="auto")
+    ap.add_argument("--plan-json", default=None,
+                    help='JSON dict of Plan field overrides')
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.configs import ARCHS, SHAPES
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        todo = [(a, s, m) for a in ARCHS for s in SHAPES for m in meshes]
+        ok = fail = skip = 0
+        for arch, shape, mesh_kind in todo:
+            path = cell_path(out_dir, arch, shape, mesh_kind, args.plan)
+            if path.exists() and not args.force:
+                prev = json.loads(path.read_text())
+                ok += ("error" not in prev and "skip" not in prev)
+                skip += "skip" in prev
+                fail += "error" in prev
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                   "--plan", args.plan, "--out", str(out_dir)]
+            print(f"[dryrun] {arch} × {shape} × {mesh_kind} ...",
+                  flush=True)
+            try:
+                r = subprocess.run(cmd, timeout=args.timeout,
+                                   capture_output=True, text=True)
+                if r.returncode != 0:
+                    path.write_text(json.dumps(
+                        {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                         "error": (r.stderr or r.stdout)[-4000:]}, indent=1))
+                    fail += 1
+                    print(f"  FAIL (rc={r.returncode})", flush=True)
+                else:
+                    res = json.loads(path.read_text())
+                    if "skip" in res:
+                        skip += 1
+                        print("  skip", flush=True)
+                    else:
+                        ok += 1
+                        rl = res["roofline"]
+                        print(f"  ok compile={res['compile_s']}s "
+                              f"dominant={rl['dominant']} "
+                              f"step={rl['step_time_s']:.4f}s", flush=True)
+            except subprocess.TimeoutExpired:
+                path.write_text(json.dumps(
+                    {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                     "error": f"timeout after {args.timeout}s"}, indent=1))
+                fail += 1
+                print("  TIMEOUT", flush=True)
+        print(f"[dryrun] done: {ok} ok, {skip} skip, {fail} fail")
+        sys.exit(1 if fail else 0)
+
+    # single cell (in-process)
+    assert args.arch and args.shape
+    path = cell_path(out_dir, args.arch, args.shape, args.mesh, args.plan)
+    try:
+        overrides = json.loads(args.plan_json) if args.plan_json else None
+        res = run_cell(args.arch, args.shape, args.mesh, args.plan, out_dir,
+                       overrides)
+    except Exception:
+        res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "error": traceback.format_exc()[-6000:]}
+        path.write_text(json.dumps(res, indent=1))
+        print(json.dumps(res, indent=1))
+        sys.exit(1)
+    path.write_text(json.dumps(res, indent=1))
+    print(json.dumps({k: v for k, v in res.items()
+                      if k in ("arch", "shape", "mesh", "compile_s",
+                               "roofline", "fits_16GiB", "skip")}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

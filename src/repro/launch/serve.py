@@ -1,0 +1,75 @@
+"""Batched serving driver: prefill + greedy decode over a request batch.
+
+CPU-runnable with reduced configs; the same ``serve_step`` is what the
+decode dry-run cells lower at pod scale (with sequence-sharded KV).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+      --reduced --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def generate(model, params, batch, prompt_len: int, gen: int,
+             cache_len: int):
+    """Greedy decode `gen` tokens after prefilling `batch['tokens']`."""
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len))
+    step = jax.jit(model.decode_step)
+    logits, cache = prefill(params, batch)
+    toks = []
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    toks.append(tok)
+    for i in range(gen - 1):
+        logits, cache = step(params, cache, tok,
+                             jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.models.lm import Model
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    key = jax.random.PRNGKey(1)
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["img_embed"] = jax.random.normal(
+            key, (args.batch, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.n_frames, cfg.d_model), jnp.float32)
+
+    cache_len = args.prompt_len + args.gen
+    t0 = time.perf_counter()
+    out = generate(model, params, batch, args.prompt_len, args.gen,
+                   cache_len)
+    dt = time.perf_counter() - t0
+    print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+    print("sample tokens:", jax.device_get(out[0, :12]).tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` -> dict of SDS for the step function selected by
+the shape kind:
+  * train:   {tokens, labels} (+ img_embed / frames)
+  * prefill: {tokens} (+ extras)
+  * decode:  {tokens[B,1], cache, pos}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+
+
+def _extras(cfg: ModelConfig, batch: int, dtype):
+    out = {}
+    if cfg.family == "vlm":
+        out["img_embed"] = SDS((batch, cfg.n_img_tokens, cfg.d_model), dtype)
+    if cfg.family == "audio":
+        out["frames"] = SDS((batch, cfg.n_frames, cfg.d_model), dtype)
+    return out
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    b = shape.global_batch
+    if shape.kind == "train":
+        out = {"tokens": SDS((b, shape.seq_len), jnp.int32),
+               "labels": SDS((b, shape.seq_len), jnp.int32)}
+        out.update(_extras(cfg, b, dtype))
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((b, shape.seq_len), jnp.int32)}
+        out.update(_extras(cfg, b, dtype))
+        return out
+    if shape.kind == "decode":
+        return {"tokens": SDS((b, 1), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, plan=None) -> dict:
+    """Abstract decode-cache pytree (eval_shape over init_cache)."""
+    quant = bool(plan and getattr(plan, "kv_cache_quant", False))
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                              quant=quant))
+
+
+def logical_batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Logical sharding axes for each batch input."""
+    if shape.kind == "train":
+        out = {"tokens": ("batch", None), "labels": ("batch", None)}
+    elif shape.kind == "prefill":
+        out = {"tokens": ("batch", None)}
+    else:
+        out = {"tokens": ("batch", None)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["img_embed"] = ("batch", None, None)
+    if cfg.family == "audio" and shape.kind != "decode":
+        out["frames"] = ("batch", None, None)
+    return out

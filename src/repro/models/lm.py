@@ -1,0 +1,934 @@
+"""Unified language model covering all assigned architecture families.
+
+families: dense (granite / danube / command-r+ / nemotron), moe (moonshot /
+arctic), hybrid (recurrentgemma), ssm (mamba2), vlm (llama-3.2-vision
+backbone, stub image frontend), audio (seamless enc-dec backbone, stub frame
+frontend).
+
+Layer stacks are ``jax.lax.scan`` over stacked params (keeps the HLO small —
+essential for the 512-device dry-run), with per-block remat controlled by the
+active :class:`~repro.dist.plan.Plan`.
+
+Entry points, bound by :class:`Model`:
+  * ``train_loss(params, batch)``               -> (loss, metrics)
+  * ``prefill(params, batch, cache_len)``       -> (last_logits, cache)
+  * ``decode_step(params, cache, tokens, pos)`` -> (logits, cache)
+
+The prefill path collects every layer's K/V (and recurrent/SSM final states)
+as ``scan`` outputs — one pass, no per-token loop — so it lowers cleanly at
+32k tokens for the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.plan import Plan
+from repro.dist.sharding import NullRules
+from repro.models import layers, moe as moe_mod, rglru, ssm as ssm_mod
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ===========================================================================
+# block init / axes
+# ===========================================================================
+
+def _init_dense_block(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    ffn = (moe_mod.init_moe(ks[2], cfg, dtype) if cfg.moe is not None
+           else layers.init_ffn(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn_act,
+                                cfg.use_bias, dtype))
+    return {
+        "attn_norm": layers.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+        "attn": layers.init_attn(ks[1], cfg, dtype),
+        "ffn_norm": layers.init_norm(ks[3], cfg.d_model, cfg.norm, dtype),
+        "ffn": ffn,
+    }
+
+
+def _dense_block_axes(cfg):
+    ffn = (moe_mod.moe_axes(cfg) if cfg.moe is not None
+           else layers.ffn_axes(cfg.ffn_act, cfg.use_bias))
+    return {
+        "attn_norm": layers.norm_axes(cfg.norm),
+        "attn": layers.attn_axes(cfg),
+        "ffn_norm": layers.norm_axes(cfg.norm),
+        "ffn": ffn,
+    }
+
+
+def _init_cross_block(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "attn_norm": layers.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+        "attn": layers.init_attn(ks[1], cfg, dtype),
+        "ffn_norm": layers.init_norm(ks[2], cfg.d_model, cfg.norm, dtype),
+        "ffn": layers.init_ffn(ks[3], cfg.d_model, cfg.d_ff, cfg.ffn_act,
+                               cfg.use_bias, dtype),
+    }
+
+
+def _cross_block_axes(cfg):
+    return {
+        "attn_norm": layers.norm_axes(cfg.norm),
+        "attn": layers.attn_axes(cfg),
+        "ffn_norm": layers.norm_axes(cfg.norm),
+        "ffn": layers.ffn_axes(cfg.ffn_act, cfg.use_bias),
+    }
+
+
+def _init_recurrent_block(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": layers.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+        "lru": rglru.init_rglru(ks[1], cfg, dtype),
+        "ffn_norm": layers.init_norm(ks[2], cfg.d_model, cfg.norm, dtype),
+        "ffn": layers.init_ffn(ks[3], cfg.d_model, cfg.d_ff, cfg.ffn_act,
+                               cfg.use_bias, dtype),
+    }
+
+
+def _recurrent_block_axes(cfg):
+    return {
+        "norm": layers.norm_axes(cfg.norm),
+        "lru": rglru.rglru_axes(cfg),
+        "ffn_norm": layers.norm_axes(cfg.norm),
+        "ffn": layers.ffn_axes(cfg.ffn_act, cfg.use_bias),
+    }
+
+
+def _init_ssm_block(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm": layers.init_norm(ks[0], cfg.d_model, cfg.norm, dtype),
+        "ssm": ssm_mod.init_ssm(ks[1], cfg, dtype),
+    }
+
+
+def _ssm_block_axes(cfg):
+    return {"norm": layers.norm_axes(cfg.norm),
+            "ssm": ssm_mod.ssm_axes(cfg)}
+
+
+# ===========================================================================
+# whole-model init / axes
+# ===========================================================================
+
+def _stack_init(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def vlm_groups(cfg) -> Tuple[int, int]:
+    per = cfg.cross_attn_every
+    return cfg.n_layers // (per + 1), per
+
+
+def hybrid_groups(cfg) -> Tuple[int, int]:
+    pat = cfg.hybrid.pattern
+    groups = cfg.n_layers // len(pat)
+    return groups, cfg.n_layers - groups * len(pat)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = _pdt(cfg)
+    ks = jax.random.split(key, 8)
+    vp = cfg.padded_vocab
+    p: Params = {
+        "embed": layers.embed_init(ks[0], (vp, cfg.d_model), dtype),
+        "final_norm": layers.init_norm(ks[1], cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.dense_init(ks[2], (cfg.d_model, vp),
+                                         cfg.d_model, dtype)
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        p["blocks"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg, dtype), ks[3], cfg.n_layers)
+    elif fam == "vlm":
+        groups, per = vlm_groups(cfg)
+        p["self_blocks"] = _stack_init(
+            lambda k: _stack_init(
+                lambda k2: _init_dense_block(k2, cfg, dtype), k, per),
+            ks[3], groups)
+        p["cross_blocks"] = _stack_init(
+            lambda k: _init_cross_block(k, cfg, dtype), ks[4], groups)
+    elif fam == "audio":
+        p["enc_blocks"] = _stack_init(
+            lambda k: _init_dense_block(k, cfg, dtype), ks[3],
+            cfg.encoder_layers)
+        p["enc_norm"] = layers.init_norm(ks[5], cfg.d_model, cfg.norm, dtype)
+        p["dec_blocks"] = _stack_init(
+            lambda k: {"self": _init_dense_block(k, cfg, dtype),
+                       "cross": _init_cross_block(
+                           jax.random.fold_in(k, 1), cfg, dtype)},
+            ks[4], cfg.n_layers)
+    elif fam == "hybrid":
+        pat = cfg.hybrid.pattern
+        groups, tail = hybrid_groups(cfg)
+
+        def init_group(k):
+            out = {}
+            for i, kind in enumerate(pat):
+                sub = jax.random.fold_in(k, i)
+                out[f"b{i}"] = (_init_recurrent_block(sub, cfg, dtype)
+                                if kind == "recurrent"
+                                else _init_dense_block(sub, cfg, dtype))
+            return out
+
+        p["blocks"] = _stack_init(init_group, ks[3], groups)
+        if tail:
+            p["tail"] = [
+                (_init_recurrent_block(jax.random.fold_in(ks[6], i), cfg,
+                                       dtype)
+                 if pat[i % len(pat)] == "recurrent"
+                 else _init_dense_block(jax.random.fold_in(ks[6], i), cfg,
+                                        dtype))
+                for i in range(tail)]
+    elif fam == "ssm":
+        p["blocks"] = _stack_init(
+            lambda k: _init_ssm_block(k, cfg, dtype), ks[3], cfg.n_layers)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return p
+
+
+def param_axes(cfg: ModelConfig) -> Params:
+    """Pytree of logical-axis tuples matching init_params' structure."""
+
+    def stack(tree):
+        return jax.tree.map(lambda ax: ("layers",) + ax, tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+
+    p = {"embed": ("vocab", "embed"),
+         "final_norm": layers.norm_axes(cfg.norm)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ("embed", "vocab")
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        p["blocks"] = stack(_dense_block_axes(cfg))
+    elif fam == "vlm":
+        p["self_blocks"] = stack(stack(_dense_block_axes(cfg)))
+        p["cross_blocks"] = stack(_cross_block_axes(cfg))
+    elif fam == "audio":
+        p["enc_blocks"] = stack(_dense_block_axes(cfg))
+        p["enc_norm"] = layers.norm_axes(cfg.norm)
+        p["dec_blocks"] = stack({"self": _dense_block_axes(cfg),
+                                 "cross": _cross_block_axes(cfg)})
+    elif fam == "hybrid":
+        pat = cfg.hybrid.pattern
+        group = {f"b{i}": (_recurrent_block_axes(cfg) if k == "recurrent"
+                           else _dense_block_axes(cfg))
+                 for i, k in enumerate(pat)}
+        p["blocks"] = stack(group)
+        _, tail = hybrid_groups(cfg)
+        if tail:
+            p["tail"] = [(_recurrent_block_axes(cfg)
+                          if pat[i % len(pat)] == "recurrent"
+                          else _dense_block_axes(cfg)) for i in range(tail)]
+    elif fam == "ssm":
+        p["blocks"] = stack(_ssm_block_axes(cfg))
+    return p
+
+
+# ===========================================================================
+# forward blocks
+# ===========================================================================
+
+def _maybe_remat(fn, plan):
+    if plan.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable
+              if plan.remat == "full" else
+              jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def _window_of(cfg) -> int:
+    return cfg.window if cfg.attn_kind == "swa" else 0
+
+
+def _embed(cfg, rules, params, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(_dt(cfg))
+    scale = jnp.sqrt(jnp.float32(cfg.d_model)).astype(_dt(cfg))
+    return rules.constrain(h * scale, ("batch", "seq", None))
+
+
+def _apply_dense_block(p, cfg, plan, rules, h, positions, window,
+                       collect=False):
+    x = layers.apply_norm(p["attn_norm"], h, cfg.norm)
+    q = layers.q_project(p["attn"], cfg, x)
+    k, v = layers.kv_project(p["attn"], cfg, x)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    q = rules.constrain(q, ("batch", None, "heads", None))
+    k = rules.constrain(k, ("batch", None, "kv_heads", None))
+    attn_out = layers.attention(q, k, v, causal=True, window=window,
+                                softcap=cfg.logit_softcap, plan=plan)
+    h = h + rules.constrain(
+        layers.out_project(p["attn"], cfg, attn_out), ("batch", None, None))
+    x = layers.apply_norm(p["ffn_norm"], h, cfg.norm)
+    if cfg.moe is not None:
+        if plan.moe_impl == "shardmap_ep":
+            y, aux = moe_mod.apply_moe_ep(p["ffn"], cfg, x, rules,
+                                          plan.moe_capacity_factor)
+        else:
+            y, aux = moe_mod.apply_moe(p["ffn"], cfg, x, rules,
+                                       plan.moe_capacity_factor,
+                                       groups=plan.moe_groups)
+    else:
+        y, aux = layers.apply_ffn(p["ffn"], x, cfg.ffn_act, cfg.use_bias), 0.0
+    h = h + rules.constrain(y, ("batch", None, None))
+    kv = (k, v) if collect else None
+    return h, aux, kv
+
+
+def _decode_dense_block(p, cfg, plan, rules, h, cache, pos, window):
+    """h [B,1,D]; cache {k,v: [B,W,KV,Dh]}; pos = absolute position scalar."""
+    x = layers.apply_norm(p["attn_norm"], h, cfg.norm)
+    q = layers.q_project(p["attn"], cfg, x)
+    k, v = layers.kv_project(p["attn"], cfg, x)
+    posv = jnp.full((h.shape[0], 1), pos, jnp.int32)
+    q = layers.apply_rope(q, posv, cfg.rope_theta)
+    k = layers.apply_rope(k, posv, cfg.rope_theta)
+    w = cache["k"].shape[1]
+    slot = (pos % w) if window else jnp.minimum(pos, w - 1)
+    quant = "k_scale" in cache
+    if quant:
+        k, k_s = layers.quantize_kv(k)
+        v, v_s = layers.quantize_kv(v)
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    k_cache = rules.constrain(k_cache, ("batch", "kv_seq", "kv_heads", None))
+    v_cache = rules.constrain(v_cache, ("batch", "kv_seq", "kv_heads", None))
+    cache_len = jnp.minimum(pos + 1, w)
+    if quant:
+        ks_cache = jax.lax.dynamic_update_slice(
+            cache["k_scale"], k_s, (0, slot, 0, 0))
+        vs_cache = jax.lax.dynamic_update_slice(
+            cache["v_scale"], v_s, (0, slot, 0, 0))
+        attn_out = layers.decode_attention_quant(
+            q, k_cache, ks_cache, v_cache, vs_cache, cache_len,
+            softcap=cfg.logit_softcap)
+    else:
+        attn_out = layers.decode_attention(q, k_cache, v_cache, cache_len,
+                                           softcap=cfg.logit_softcap)
+    h = h + layers.out_project(p["attn"], cfg, attn_out)
+    x = layers.apply_norm(p["ffn_norm"], h, cfg.norm)
+    if cfg.moe is not None:
+        if plan.moe_impl == "shardmap_ep":
+            y, _ = moe_mod.apply_moe_ep(p["ffn"], cfg, x, rules,
+                                        plan.moe_capacity_factor)
+        else:
+            y, _ = moe_mod.apply_moe(p["ffn"], cfg, x, rules,
+                                     plan.moe_capacity_factor,
+                                     groups=plan.moe_groups)
+    else:
+        y = layers.apply_ffn(p["ffn"], x, cfg.ffn_act, cfg.use_bias)
+    new_cache = {"k": k_cache, "v": v_cache}
+    if quant:
+        new_cache["k_scale"] = ks_cache
+        new_cache["v_scale"] = vs_cache
+    return h + y, new_cache
+
+
+def _apply_cross_block(p, cfg, plan, rules, h, ctx, collect=False):
+    x = layers.apply_norm(p["attn_norm"], h, cfg.norm)
+    q = layers.q_project(p["attn"], cfg, x)
+    k, v = layers.kv_project(p["attn"], cfg, ctx)
+    attn_out = layers.dense_attention(q, k, v, causal=False)
+    h = h + layers.out_project(p["attn"], cfg, attn_out)
+    x = layers.apply_norm(p["ffn_norm"], h, cfg.norm)
+    h = h + layers.apply_ffn(p["ffn"], x, cfg.ffn_act, cfg.use_bias)
+    return (h, (k, v)) if collect else (h, None)
+
+
+def _apply_cross_block_cached(p, cfg, rules, h, kc, vc):
+    x = layers.apply_norm(p["attn_norm"], h, cfg.norm)
+    q = layers.q_project(p["attn"], cfg, x)
+    attn_out = layers.decode_attention(q, kc, vc, jnp.int32(kc.shape[1]))
+    h = h + layers.out_project(p["attn"], cfg, attn_out)
+    x = layers.apply_norm(p["ffn_norm"], h, cfg.norm)
+    return h + layers.apply_ffn(p["ffn"], x, cfg.ffn_act, cfg.use_bias)
+
+
+def _apply_recurrent_block(bp, cfg, plan, rules, h, collect=False):
+    x = layers.apply_norm(bp["norm"], h, cfg.norm)
+    if collect:
+        y, st = rglru.apply_rglru(bp["lru"], cfg, x, rules, return_state=True)
+    else:
+        y, st = rglru.apply_rglru(bp["lru"], cfg, x, rules), None
+    h = h + y
+    x = layers.apply_norm(bp["ffn_norm"], h, cfg.norm)
+    h = h + layers.apply_ffn(bp["ffn"], x, cfg.ffn_act, cfg.use_bias)
+    return h, st
+
+
+# ===========================================================================
+# backbone (training + prefill share this; prefill collects caches)
+# ===========================================================================
+
+def _backbone(cfg, plan, rules, params, h, positions, batch, collect=False):
+    """Run the layer stack. Returns (hidden, aux_loss, collected)."""
+    fam = cfg.family
+    window = _window_of(cfg)
+    aux0 = jnp.float32(0.0)
+
+    if fam in ("dense", "moe"):
+        def body(carry, layer_p):
+            hh, aux = carry
+            hh, a, kv = _apply_dense_block(layer_p, cfg, plan, rules, hh,
+                                           positions, window, collect)
+            return (hh, aux + a), kv
+
+        (h, aux), kvs = jax.lax.scan(_maybe_remat(body, plan), (h, aux0),
+                                     params["blocks"])
+        return h, aux, {"attn": kvs}
+
+    if fam == "vlm":
+        ctx = batch["img_embed"].astype(_dt(cfg))
+
+        def group_body(carry, gp):
+            hh, aux = carry
+
+            def self_body(h2, lp):
+                h2, _, kv = _apply_dense_block(lp, cfg, plan, rules, h2,
+                                               positions, window, collect)
+                return h2, kv
+
+            hh, kvs = jax.lax.scan(_maybe_remat(self_body, plan), hh,
+                                   gp["self"])
+            hh, ckv = _apply_cross_block(gp["cross"], cfg, plan, rules, hh,
+                                         ctx, collect)
+            return (hh, aux), (kvs, ckv)
+
+        (h, aux), (kvs, ckvs) = jax.lax.scan(
+            group_body, (h, aux0),
+            {"self": params["self_blocks"], "cross": params["cross_blocks"]})
+        return h, aux, {"attn": kvs, "cross": ckvs}
+
+    if fam == "audio":
+        enc = encode_audio(cfg, plan, rules, params, batch)
+
+        def dec_body(carry, lp):
+            hh, aux = carry
+            hh, a, kv = _apply_dense_block(lp["self"], cfg, plan, rules, hh,
+                                           positions, window, collect)
+            hh, ckv = _apply_cross_block(lp["cross"], cfg, plan, rules, hh,
+                                         enc, collect)
+            return (hh, aux + a), (kv, ckv)
+
+        (h, aux), (kvs, ckvs) = jax.lax.scan(_maybe_remat(dec_body, plan),
+                                             (h, aux0), params["dec_blocks"])
+        return h, aux, {"attn": kvs, "cross": ckvs}
+
+    if fam == "hybrid":
+        pat = cfg.hybrid.pattern
+
+        def group_body(carry, gp):
+            hh, aux = carry
+            out = {}
+            for i, kind in enumerate(pat):
+                if kind == "recurrent":
+                    hh, st = _apply_recurrent_block(gp[f"b{i}"], cfg, plan,
+                                                    rules, hh, collect)
+                    out[f"b{i}"] = st
+                else:
+                    hh, _, kv = _apply_dense_block(gp[f"b{i}"], cfg, plan,
+                                                   rules, hh, positions,
+                                                   cfg.window, collect)
+                    out[f"b{i}"] = kv
+            return (hh, aux), out
+
+        (h, aux), collected = jax.lax.scan(_maybe_remat(group_body, plan),
+                                           (h, aux0), params["blocks"])
+        tail_out = []
+        for i, bp in enumerate(params.get("tail", [])):
+            kind = pat[i % len(pat)]
+            if kind == "recurrent":
+                h, st = _apply_recurrent_block(bp, cfg, plan, rules, h,
+                                               collect)
+                tail_out.append(st)
+            else:
+                h, _, kv = _apply_dense_block(bp, cfg, plan, rules, h,
+                                              positions, cfg.window, collect)
+                tail_out.append(kv)
+        return h, aux, {"groups": collected, "tail": tail_out}
+
+    if fam == "ssm":
+        def body(carry, lp):
+            hh, aux = carry
+            x = layers.apply_norm(lp["norm"], hh, cfg.norm)
+            if collect:
+                y, st = ssm_mod.apply_ssm(lp["ssm"], cfg, x, rules,
+                                          return_state=True,
+                                          chunk=plan.ssd_chunk,
+                                          bf16=plan.ssd_bf16)
+            else:
+                y, st = ssm_mod.apply_ssm(lp["ssm"], cfg, x, rules,
+                                          chunk=plan.ssd_chunk,
+                                          bf16=plan.ssd_bf16), None
+            return (hh + y, aux), st
+
+        (h, aux), states = jax.lax.scan(_maybe_remat(body, plan), (h, aux0),
+                                        params["blocks"])
+        return h, aux, {"blocks": states}
+
+    raise ValueError(fam)
+
+
+def encode_audio(cfg, plan, rules, params, batch):
+    enc = batch["frames"].astype(_dt(cfg))
+    pos = jnp.arange(enc.shape[1])
+
+    def body(hh, lp):
+        x = layers.apply_norm(lp["attn_norm"], hh, cfg.norm)
+        q = layers.q_project(lp["attn"], cfg, x)
+        k, v = layers.kv_project(lp["attn"], cfg, x)
+        q = layers.apply_rope(q, pos, cfg.rope_theta)
+        k = layers.apply_rope(k, pos, cfg.rope_theta)
+        hh = hh + layers.out_project(
+            lp["attn"], cfg, layers.dense_attention(q, k, v, causal=False))
+        x = layers.apply_norm(lp["ffn_norm"], hh, cfg.norm)
+        return hh + layers.apply_ffn(lp["ffn"], x, cfg.ffn_act,
+                                     cfg.use_bias), None
+
+    enc, _ = jax.lax.scan(_maybe_remat(body, plan), enc,
+                          params["enc_blocks"])
+    return layers.apply_norm(params["enc_norm"], enc, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# losses / logits
+# ---------------------------------------------------------------------------
+
+def _unembed_matrix(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def chunked_softmax_xent(cfg, plan, rules, params, hidden, labels):
+    """Cross-entropy; the [B,S,V] logits are never fully materialized."""
+    w = _unembed_matrix(cfg, params)
+    b, s, d = hidden.shape
+    chunk = plan.vocab_chunk or s
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, d)
+    lc = labels.reshape(b, nc, chunk)
+
+    @jax.checkpoint
+    def step(acc, inp):
+        hh, ll = inp                            # [b,chunk,d], [b,chunk]
+        logits = jnp.einsum("bcd,dv->bcv", hh, w).astype(jnp.float32)
+        logits = rules.constrain(logits, ("batch", None, "vocab"))
+        if cfg.padded_vocab != cfg.vocab_size:
+            pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad[None, None, :], layers.NEG_INF, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0.0),
+                            (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    return total / (b * s)
+
+
+def logits_for(cfg, rules, params, hidden):
+    """Full logits for a short hidden slice (decode / last position)."""
+    w = _unembed_matrix(cfg, params)
+    logits = jnp.einsum("bsd,dv->bsv", hidden, w).astype(jnp.float32)
+    logits = rules.constrain(logits, ("batch", None, "vocab"))
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad[None, None, :], layers.NEG_INF, logits)
+    return logits
+
+
+# ===========================================================================
+# decode caches
+# ===========================================================================
+
+def _kv_cache_len(cfg, seq_len):
+    w = _window_of(cfg) or (cfg.window if cfg.family == "hybrid" else 0)
+    return min(seq_len, w) if w else seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=None, quant: bool = False) -> Params:
+    dtype = dtype or _dt(cfg)
+    kvl = _kv_cache_len(cfg, seq_len)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def kv_buf(length, *lead):
+        shape = tuple(lead) + (batch, length, kv, hd)
+        if quant:
+            sshape = tuple(lead) + (batch, length, kv, 1)
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(sshape, jnp.float32),
+                    "v_scale": jnp.zeros(sshape, jnp.float32)}
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return {"attn": kv_buf(kvl, cfg.n_layers)}
+    def kv_buf_plain(length, *lead):
+        shape = tuple(lead) + (batch, length, kv, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    if fam == "vlm":
+        groups, per = vlm_groups(cfg)
+        return {"attn": kv_buf(kvl, groups, per),
+                "cross": kv_buf_plain(cfg.n_img_tokens, groups)}
+    if fam == "audio":
+        return {"attn": kv_buf(kvl, cfg.n_layers),
+                "cross": kv_buf_plain(cfg.n_frames, cfg.n_layers)}
+    if fam == "hybrid":
+        pat = cfg.hybrid.pattern
+        groups, tail = hybrid_groups(cfg)
+        c: Params = {}
+        for i, kind in enumerate(pat):
+            if kind == "recurrent":
+                base = rglru.init_rglru_cache(cfg, batch, dtype)
+                c[f"b{i}"] = jax.tree.map(
+                    lambda x: jnp.zeros((groups,) + x.shape, x.dtype), base)
+            else:
+                c[f"b{i}"] = kv_buf_plain(min(seq_len, cfg.window), groups)
+        out = {"groups": c}
+        if tail:
+            out["tail"] = [
+                (rglru.init_rglru_cache(cfg, batch, dtype)
+                 if pat[i % len(pat)] == "recurrent"
+                 else kv_buf_plain(min(seq_len, cfg.window)))
+                for i in range(tail)]
+        return out
+    if fam == "ssm":
+        base = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        return {"blocks": jax.tree.map(
+            lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype), base)}
+    raise ValueError(fam)
+
+
+def cache_axes(cfg: ModelConfig, quant: bool = False) -> Params:
+    def kvbuf(*lead):
+        out = {"k": tuple(lead) + ("batch", "kv_seq", "kv_heads", None),
+               "v": tuple(lead) + ("batch", "kv_seq", "kv_heads", None)}
+        if quant:
+            out["k_scale"] = tuple(lead) + ("batch", "kv_seq", "kv_heads",
+                                            None)
+            out["v_scale"] = tuple(lead) + ("batch", "kv_seq", "kv_heads",
+                                            None)
+        return out
+    def kvbuf_plain(*lead):
+        return {"k": tuple(lead) + ("batch", "kv_seq", "kv_heads", None),
+                "v": tuple(lead) + ("batch", "kv_seq", "kv_heads", None)}
+    rec_axes = lambda *lead: {
+        "conv": tuple(lead) + ("batch", None, "lru"),
+        "h": tuple(lead) + ("batch", None, "lru")}
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return {"attn": kvbuf("layers")}
+    if fam == "vlm":
+        return {"attn": kvbuf("layers", None),
+                "cross": kvbuf_plain("layers")}
+    if fam == "audio":
+        return {"attn": kvbuf("layers"), "cross": kvbuf_plain("layers")}
+    if fam == "hybrid":
+        pat = cfg.hybrid.pattern
+        groups_axes = {
+            f"b{i}": (rec_axes("layers") if kind == "recurrent"
+                      else kvbuf("layers"))
+            for i, kind in enumerate(pat)}
+        out = {"groups": groups_axes}
+        _, tail = hybrid_groups(cfg)
+        if tail:
+            out["tail"] = [
+                (rec_axes() if pat[i % len(pat)] == "recurrent" else kvbuf())
+                for i in range(tail)]
+        return out
+    if fam == "ssm":
+        return {"blocks": {"conv": ("layers", "batch", None, "lru"),
+                           "state": ("layers", "batch", "heads", None,
+                                     None)}}
+    raise ValueError(fam)
+
+
+def _ring_place(k_seq, buf_len, seq_len, dtype):
+    """Place collected K/V [.., B, S, KV, D] into a ring buffer of buf_len.
+
+    Token t lives at slot t % buf_len; only the last buf_len tokens are kept.
+    Works for the full-cache case too (buf_len >= S: identity placement with
+    zero padding at the end).
+    """
+    s = k_seq.shape[-3]
+    if buf_len >= s:
+        pad = [(0, 0)] * k_seq.ndim
+        pad[-3] = (0, buf_len - s)
+        return jnp.pad(k_seq.astype(dtype), pad)
+    kept = k_seq[..., s - buf_len:, :, :]
+    positions = jnp.arange(buf_len) + (s - buf_len)
+    slots = positions % buf_len                      # a permutation
+    inv = jnp.argsort(slots)
+    return jnp.take(kept, inv, axis=-3).astype(dtype)
+
+
+def assemble_cache(cfg, collected, batch_size, seq_len, cache_len,
+                   dtype=None, quant: bool = False):
+    """Turn _backbone(collect=True) outputs into a decode cache at position
+    seq_len with buffer size cache_len."""
+    dtype = dtype or _dt(cfg)
+    kvl = _kv_cache_len(cfg, cache_len)
+
+    def place(kv):
+        k, v = kv
+        if quant:
+            kq, ks = layers.quantize_kv(k)
+            vq, vs = layers.quantize_kv(v)
+            return {"k": _ring_place(kq, kvl, seq_len, jnp.int8),
+                    "v": _ring_place(vq, kvl, seq_len, jnp.int8),
+                    "k_scale": _ring_place(ks, kvl, seq_len, jnp.float32),
+                    "v_scale": _ring_place(vs, kvl, seq_len, jnp.float32)}
+        return {"k": _ring_place(k, kvl, seq_len, dtype),
+                "v": _ring_place(v, kvl, seq_len, dtype)}
+
+    def place_win(kv):
+        k, v = kv
+        w = min(cache_len, cfg.window)
+        return {"k": _ring_place(k, w, seq_len, dtype),
+                "v": _ring_place(v, w, seq_len, dtype)}
+
+    def cross(kv):
+        k, v = kv
+        return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return {"attn": place(collected["attn"])}
+    if fam == "vlm":
+        return {"attn": place(collected["attn"]),
+                "cross": cross(collected["cross"])}
+    if fam == "audio":
+        return {"attn": place(collected["attn"]),
+                "cross": cross(collected["cross"])}
+    if fam == "hybrid":
+        pat = cfg.hybrid.pattern
+        groups = {}
+        for i, kind in enumerate(pat):
+            groups[f"b{i}"] = (collected["groups"][f"b{i}"]
+                               if kind == "recurrent"
+                               else place_win(collected["groups"][f"b{i}"]))
+        out = {"groups": groups}
+        if collected.get("tail"):
+            out["tail"] = [
+                (st if pat[i % len(pat)] == "recurrent" else place_win(st))
+                for i, st in enumerate(collected["tail"])]
+        return out
+    if fam == "ssm":
+        return {"blocks": collected["blocks"]}
+    raise ValueError(fam)
+
+
+def init_cache_with_context(cfg, plan, rules, params, batch, batch_size,
+                            cache_len):
+    """Fresh decode cache with cross-attention K/V precomputed from the
+    modality context (vlm: image embeddings; audio: encoder output).
+
+    Token-by-token decoding without a text prompt still needs these — the
+    cross K/V are a function of the context only, not of decoded tokens.
+    """
+    cache = init_cache(cfg, batch_size, cache_len,
+                       quant=plan.kv_cache_quant)
+    dtype = _dt(cfg)
+    if cfg.family == "vlm":
+        ctx = batch["img_embed"].astype(dtype)
+        ks, vs = jax.vmap(lambda p: layers.kv_project(p, cfg, ctx))(
+            params["cross_blocks"]["attn"])
+        cache["cross"] = {"k": ks.astype(dtype), "v": vs.astype(dtype)}
+    elif cfg.family == "audio":
+        enc = encode_audio(cfg, plan, rules, params, batch)
+        ks, vs = jax.vmap(lambda p: layers.kv_project(p, cfg, enc))(
+            params["dec_blocks"]["cross"]["attn"])
+        cache["cross"] = {"k": ks.astype(dtype), "v": vs.astype(dtype)}
+    return cache
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+def decode_forward(cfg, plan, rules, params, cache, tokens, pos):
+    """One decode step. tokens [B,1] int32; pos scalar absolute position."""
+    h = _embed(cfg, rules, params, tokens)
+    fam = cfg.family
+    window = _window_of(cfg)
+
+    if fam in ("dense", "moe"):
+        def body(hh, xs):
+            lp, lc = xs
+            return _decode_dense_block(lp, cfg, plan, rules, hh, lc, pos,
+                                       window)
+
+        h, new_attn = jax.lax.scan(body, h, (params["blocks"],
+                                             cache["attn"]))
+        new_cache = {"attn": new_attn}
+    elif fam == "vlm":
+        def group_body(hh, xs):
+            gp, gc_attn, gc_cross = xs
+
+            def self_body(h2, xs2):
+                lp, lc = xs2
+                return _decode_dense_block(lp, cfg, plan, rules, h2, lc,
+                                           pos, window)
+
+            hh, new_self = jax.lax.scan(self_body, hh, (gp["self"], gc_attn))
+            hh = _apply_cross_block_cached(gp["cross"], cfg, rules, hh,
+                                           gc_cross["k"], gc_cross["v"])
+            return hh, (new_self, gc_cross)
+
+        h, (new_self, new_cross) = jax.lax.scan(
+            group_body, h,
+            ({"self": params["self_blocks"],
+              "cross": params["cross_blocks"]},
+             cache["attn"], cache["cross"]))
+        new_cache = {"attn": new_self, "cross": new_cross}
+    elif fam == "audio":
+        def body(hh, xs):
+            lp, lc_attn, lc_cross = xs
+            hh, nc = _decode_dense_block(lp["self"], cfg, plan, rules, hh,
+                                         lc_attn, pos, window)
+            hh = _apply_cross_block_cached(lp["cross"], cfg, rules, hh,
+                                           lc_cross["k"], lc_cross["v"])
+            return hh, (nc, lc_cross)
+
+        h, (new_attn, new_cross) = jax.lax.scan(
+            body, h, (params["dec_blocks"], cache["attn"], cache["cross"]))
+        new_cache = {"attn": new_attn, "cross": new_cross}
+    elif fam == "hybrid":
+        pat = cfg.hybrid.pattern
+
+        def group_body(hh, xs):
+            gp, gc = xs
+            new_gc = {}
+            for i, kind in enumerate(pat):
+                bp = gp[f"b{i}"]
+                if kind == "recurrent":
+                    x = layers.apply_norm(bp["norm"], hh, cfg.norm)
+                    y, nc = rglru.decode_rglru(bp["lru"], cfg, x,
+                                               gc[f"b{i}"], rules)
+                    hh = hh + y
+                    x = layers.apply_norm(bp["ffn_norm"], hh, cfg.norm)
+                    hh = hh + layers.apply_ffn(bp["ffn"], x, cfg.ffn_act,
+                                               cfg.use_bias)
+                else:
+                    hh, nc = _decode_dense_block(bp, cfg, plan, rules, hh,
+                                                 gc[f"b{i}"], pos,
+                                                 cfg.window)
+                new_gc[f"b{i}"] = nc
+            return hh, new_gc
+
+        h, new_groups = jax.lax.scan(group_body, h,
+                                     (params["blocks"], cache["groups"]))
+        new_cache = {"groups": new_groups}
+        if "tail" in params:
+            new_tail = []
+            for i, bp in enumerate(params["tail"]):
+                kind = pat[i % len(pat)]
+                tc = cache["tail"][i]
+                if kind == "recurrent":
+                    x = layers.apply_norm(bp["norm"], h, cfg.norm)
+                    y, nc = rglru.decode_rglru(bp["lru"], cfg, x, tc, rules)
+                    h = h + y
+                    x = layers.apply_norm(bp["ffn_norm"], h, cfg.norm)
+                    h = h + layers.apply_ffn(bp["ffn"], x, cfg.ffn_act,
+                                             cfg.use_bias)
+                else:
+                    h, nc = _decode_dense_block(bp, cfg, plan, rules, h, tc,
+                                                pos, cfg.window)
+                new_tail.append(nc)
+            new_cache["tail"] = new_tail
+    elif fam == "ssm":
+        def body(hh, xs):
+            lp, lc = xs
+            x = layers.apply_norm(lp["norm"], hh, cfg.norm)
+            y, nc = ssm_mod.decode_ssm(lp["ssm"], cfg, x, lc, rules)
+            return hh + y, nc
+
+        h, new_blocks = jax.lax.scan(body, h, (params["blocks"],
+                                               cache["blocks"]))
+        new_cache = {"blocks": new_blocks}
+    else:
+        raise ValueError(fam)
+
+    h = layers.apply_norm(params["final_norm"], h, cfg.norm)
+    logits = logits_for(cfg, rules, params, h)[:, 0]
+    return logits, new_cache
+
+
+# ===========================================================================
+# public API
+# ===========================================================================
+
+class Model:
+    """Binds (cfg, plan, rules) into callable train/serve functions."""
+
+    def __init__(self, cfg: ModelConfig, plan: Optional[Plan] = None,
+                 rules=None):
+        self.cfg = cfg
+        self.plan = plan or Plan()
+        self.rules = rules or NullRules()
+
+    def init(self, key) -> Params:
+        return init_params(key, self.cfg)
+
+    def param_axes(self) -> Params:
+        return param_axes(self.cfg)
+
+    def train_loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        cfg, plan, rules = self.cfg, self.plan, self.rules
+        tokens = batch["tokens"]
+        h = _embed(cfg, rules, params, tokens)
+        positions = jnp.arange(tokens.shape[1])
+        h, aux, _ = _backbone(cfg, plan, rules, params, h, positions, batch)
+        h = layers.apply_norm(params["final_norm"], h, cfg.norm)
+        loss = chunked_softmax_xent(cfg, plan, rules, params, h,
+                                    batch["labels"])
+        total = loss + 0.01 * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    def prefill(self, params, batch, cache_len: int):
+        """Full-prompt pass; returns (last_logits, decode cache)."""
+        cfg, plan, rules = self.cfg, self.plan, self.rules
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = _embed(cfg, rules, params, tokens)
+        positions = jnp.arange(s)
+        h, _, collected = _backbone(cfg, plan, rules, params, h, positions,
+                                    batch, collect=True)
+        h = layers.apply_norm(params["final_norm"], h, cfg.norm)
+        last = logits_for(cfg, rules, params, h[:, -1:])[:, 0]
+        cache = assemble_cache(cfg, collected, b, s, cache_len,
+                               quant=plan.kv_cache_quant)
+        return last, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        return decode_forward(self.cfg, self.plan, self.rules, params, cache,
+                              tokens, pos)
+
+    def init_context_cache(self, params, batch, batch_size, cache_len):
+        return init_cache_with_context(self.cfg, self.plan, self.rules,
+                                       params, batch, batch_size, cache_len)

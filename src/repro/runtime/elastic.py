@@ -1,0 +1,55 @@
+"""Elastic scaling: resume any checkpoint onto a different mesh.
+
+Checkpoints store full (global) arrays, so resharding is a pure placement
+decision at restore time.  ``reshard_restore`` rebuilds the sharding pytree
+for the *new* mesh from the model's logical axes and restores onto it —
+scale from 512 chips to 256 (or to this CPU host) without conversion.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.dist.plan import Plan
+from repro.dist.sharding import Rules, tree_shardings
+
+
+def shardings_for(cfg, mesh, plan: Plan, tree_sds, axes_tree):
+    rules = Rules(mesh, plan)
+    return tree_shardings(rules, axes_tree, tree_sds)
+
+
+def reshard_restore(ckpt: Checkpointer, *, step: Optional[int],
+                    new_mesh, plan: Plan, cfg, make_abstract,
+                    axes_tree) -> Any:
+    """Restore checkpoint `step` re-sharded for `new_mesh`.
+
+    make_abstract() -> pytree of ShapeDtypeStruct matching the saved tree.
+    """
+    sds = make_abstract()
+    shardings = shardings_for(cfg, new_mesh, plan, sds, axes_tree)
+    tree, extra = ckpt.restore(step, shardings=shardings)
+    return tree, extra
+
+
+def available_mesh(preferred_shape=None, axes=("data", "model")):
+    """Best mesh for the devices that are actually alive (elastic restart
+    after losing a slice): largest power-of-two data axis x rest."""
+    n = len(jax.devices())
+    if preferred_shape is not None:
+        need = 1
+        for s in preferred_shape:
+            need *= s
+        if need <= n:
+            import numpy as np
+            from jax.sharding import AxisType, Mesh
+            return Mesh(np.asarray(jax.devices()[:need]).reshape(
+                preferred_shape), axes,
+                axis_types=(AxisType.Auto,) * len(axes))
+    # fall back: 1-D data mesh over whatever is left
+    import numpy as np
+    from jax.sharding import AxisType, Mesh
+    return Mesh(np.asarray(jax.devices()).reshape(n, 1), axes,
+                axis_types=(AxisType.Auto,) * len(axes))

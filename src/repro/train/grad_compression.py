@@ -1,0 +1,69 @@
+"""int8 error-feedback gradient compression for the slow cross-pod axis.
+
+Cross-pod (DCN-class) bandwidth is the scarce resource in multi-pod data
+parallelism.  ``compressed_psum`` quantizes each gradient leaf to int8 with a
+per-leaf scale before the all-reduce over the pod axis and adds the
+quantization residual to an error-feedback buffer that is re-injected on the
+next step (1-bit-Adam/EF-SGD style, but int8).
+
+Used inside ``shard_map`` over the "pod" axis (see
+``repro.train.train_step.make_pod_parallel_train_step``), and unit-tested on
+a forced 8-device host platform.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x) -> Tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(grads, ef_state, axis_name: str):
+    """All-reduce `grads` over `axis_name` in int8 with error feedback.
+
+    Returns (reduced_grads_fp32, new_ef_state).  Inside shard_map only.
+    """
+    def leaf(g, ef):
+        gf = g.astype(jnp.float32) + ef
+        q, scale = quantize_int8(gf)
+        deq = dequantize_int8(q, scale)
+        new_ef = gf - deq
+        # int8 values summed in int32 to avoid overflow across pods;
+        # per-pod scales are reduced alongside (scale differs per pod, so
+        # reduce the dequantized representation's contributions exactly by
+        # psum'ing q*scale in fp32 is equivalent to psum(deq); we keep the
+        # wire format int8 by psum'ing q (int32 accum) and using the max
+        # scale — the residual goes into error feedback either way.
+        scale_max = jax.lax.pmax(scale, axis_name)
+        q_rescaled = jnp.round(deq / scale_max).astype(jnp.int32)
+        total = jax.lax.psum(q_rescaled, axis_name)
+        out = total.astype(jnp.float32) * scale_max
+        # fold the rescaling error into the feedback buffer too
+        new_ef = new_ef + (deq - q_rescaled.astype(jnp.float32) * scale_max)
+        return out, new_ef
+
+    out = jax.tree.map(leaf, grads, ef_state)
+    reduced = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return reduced, new_ef
+
+
+def plain_psum(grads, axis_name: str):
+    return jax.tree.map(lambda g: jax.lax.psum(g, axis_name), grads)

@@ -1,0 +1,114 @@
+"""AdamW with ZeRO-style sharded moments and warmup+cosine schedule.
+
+Moments inherit the parameter sharding (params are already FSDP+TP sharded
+under the plan, so m/v are fully sharded — ZeRO-1 falls out of GSPMD).
+``master_dtype`` controls moment precision; an optional fp32 master copy of
+the params supports pure-bf16 param storage at pod scale.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_schedule(tcfg: TrainConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - tcfg.warmup_steps)
+                 / jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1),
+                 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return tcfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init(params, tcfg: TrainConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(tcfg.master_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    state = {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if tcfg.use_master_copy:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def opt_state_axes(par_axes, tcfg: TrainConfig):
+    """Logical axes for the optimizer state (moments mirror params)."""
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    state = {
+        "m": par_axes,
+        "v": par_axes,
+        "count": (),
+    }
+    if tcfg.use_master_copy:
+        state["master"] = par_axes
+    del is_ax
+    return state
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(grads, state, params, tcfg: TrainConfig
+           ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    count = state["count"] + 1
+    lr = lr_schedule(tcfg, count)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9))
+    mdt = jnp.dtype(tcfg.master_dtype)
+
+    b1, b2, eps = tcfg.beta1, tcfg.beta2, tcfg.eps
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p, master=None):
+        g = g.astype(jnp.float32) * clip
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        base = master if master is not None else p
+        step_vec = mhat / (jnp.sqrt(vhat) + eps) \
+            + tcfg.weight_decay * base.astype(jnp.float32)
+        new_base = base.astype(jnp.float32) - lr * step_vec
+        return new_base, m_new.astype(mdt), v_new.astype(mdt)
+
+    if tcfg.use_master_copy:
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params,
+                           state["master"])
+        new_master = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(
+            lambda nm, p: nm.astype(p.dtype), new_master, params)
+        new_state = {
+            "m": jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple)),
+            "v": jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple)),
+            "master": new_master,
+            "count": count,
+        }
+    else:
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(
+            lambda t, p: t[0].astype(p.dtype), out, params,
+            is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {
+            "m": jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple)),
+            "v": jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple)),
+            "count": count,
+        }
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, new_state, metrics

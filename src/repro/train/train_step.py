@@ -1,0 +1,151 @@
+"""Train / serve step builders.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+with microbatch gradient accumulation and plan-controlled remat; it is meant
+to be ``jax.jit``-ed with shardings by the launcher (see
+``repro.launch.train`` / ``repro.launch.dryrun``).
+
+``make_pod_parallel_train_step`` is the explicit multi-pod variant: the data
+axes inside a pod stay under GSPMD (auto axes), while the cross-pod gradient
+reduction is lifted into a ``shard_map`` over the "pod" axis so it can be
+compressed (int8 + error feedback) — the paper's transfer-reduction idea
+applied to the slowest link.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.lm import Model
+from repro.train import grad_compression, optimizer
+
+
+def _split_microbatches(batch, n):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} % microbatches {n} != 0"
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch)
+    return loss_fn
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    n_micro = max(model.plan.microbatches, 1)
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch, step):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = _split_microbatches(batch, n_micro)
+
+            def acc_step(carry, microbatch):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, microbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), _ = jax.lax.scan(acc_step, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            metrics = {"loss": loss, "aux_loss": jnp.float32(0.0)}
+
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, params, tcfg)
+        metrics = dict(metrics, **opt_metrics, step=step)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_pod_parallel_train_step(model: Model, tcfg: TrainConfig,
+                                 mesh) -> Callable:
+    """Explicit cross-pod shard_map with (optionally compressed) grad psum.
+
+    opt_state gains an "ef" entry (error-feedback buffers) when the plan
+    enables grad_compression.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.sharding import Rules
+    from repro.models.lm import Model
+
+    # inside the pod shard_map the "pod" axis is Manual: the inner model's
+    # sharding rules must only reference the remaining (Auto) axes
+    inner_rules = Rules(mesh, model.plan, exclude_axes=("pod",))
+    inner_model = Model(model.cfg, model.plan, inner_rules)
+    loss_fn = make_loss_fn(inner_model)
+    compress = model.plan.grad_compression
+
+    def train_step(params, opt_state, batch, step):
+        def pod_body(params_l, ef_l, batch_l):
+            # grads for this pod's batch shard; data/model axes stay auto
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params_l, batch_l)
+            if compress:
+                grads, new_ef = grad_compression.compressed_psum(
+                    grads, ef_l, "pod")
+            else:
+                grads = grad_compression.plain_psum(grads, "pod")
+                new_ef = ef_l
+            grads = jax.tree.map(
+                lambda g: g / mesh.shape["pod"], grads)
+            loss = jax.lax.pmean(loss, "pod")
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"),
+                                   metrics)
+            return grads, new_ef, loss, metrics
+
+        ef = opt_state.get("ef")
+        if ef is None:
+            ef = jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+
+        rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+        shard_batch = jax.tree.map(lambda _: P("pod"), batch)
+        grads, new_ef, loss, metrics = jax.shard_map(
+            pod_body, mesh=mesh,
+            in_specs=(rep(params), rep(ef), shard_batch),
+            out_specs=(rep(params), rep(ef), P(), rep({"loss": 0,
+                                                       "aux_loss": 0})),
+            check_vma=False,
+            axis_names={"pod"},
+        )(params, ef, batch)
+
+        opt_wo_ef = {k: v for k, v in opt_state.items() if k != "ef"}
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_wo_ef, params, tcfg)
+        new_opt["ef"] = new_ef
+        metrics = dict(metrics, **opt_metrics, loss=loss, step=step)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model: Model, cache_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len)
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """(params, cache, tokens[B,1], pos) -> (logits [B,V], new cache)."""
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return serve_step

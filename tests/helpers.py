@@ -1,0 +1,39 @@
+"""Test helpers: run code in a subprocess with a forced multi-device host.
+
+Smoke tests and benches must see 1 device (the task spec forbids setting the
+device-count flag globally), so anything needing a mesh runs via this
+helper.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 420):
+    """Execute `code` in a fresh python with n_devices fake host devices.
+
+    The snippet should print its assertions' outcomes; non-zero exit or
+    'FAIL' in output fails the calling test.
+    """
+    prelude = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+        "import sys\n"
+        f"sys.path.insert(0, {SRC!r})\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    assert proc.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{proc.stdout[-3000:]}\n"
+        f"STDERR:\n{proc.stderr[-3000:]}")
+    assert "FAIL" not in proc.stdout, proc.stdout[-3000:]
+    return proc.stdout

@@ -1,0 +1,80 @@
+"""Paper apps: correctness of destination impls + the many-core hazard."""
+import jax
+import numpy as np
+import pytest
+
+from repro.apps import APPS
+from repro.core.destinations import MANY_CORE, GPU, FPGA
+from repro.core.ga import GAConfig
+from repro.core.loop_offload import ga_search, fpga_search
+from repro.core.measure import TimedRunner, outputs_close
+
+
+@pytest.fixture(scope="module")
+def small_states():
+    return {name: APPS[name]().make_inputs(seed=0, small=True)
+            for name in APPS}
+
+
+@pytest.mark.parametrize("name", list(APPS))
+def test_safe_nests_parallelize_correctly(name, small_states):
+    app = APPS[name]()
+    st = small_states[name]
+    ref = jax.jit(app.reference_fn())(st)
+    for dest_key in ("dp", "tp"):
+        choice = {n.name: dest_key for n in app.nests
+                  if n.parallel_safe and dest_key in n.impls}
+        out = jax.jit(app.build(choice))(st)
+        assert outputs_close(out, ref), (name, dest_key)
+
+
+def test_nasbt_unsafe_nest_changes_result(small_states):
+    app = APPS["NAS.BT"]()
+    st = small_states["NAS.BT"]
+    ref = jax.jit(app.reference_fn())(st)
+    out = jax.jit(app.build({"seidel_relax": "dp"}))(st)
+    assert not outputs_close(out, ref)
+
+
+def test_nasbt_ga_rejects_unsafe_gene(small_states):
+    app = APPS["NAS.BT"]()
+    st = small_states["NAS.BT"]
+    ref = jax.jit(app.reference_fn())(st)
+    res = ga_search(app, MANY_CORE, TimedRunner(repeats=1), st, ref,
+                    ga_cfg=GAConfig(population=6, generations=6, seed=1))
+    assert res.best_choice["seidel_relax"] == "seq"
+
+
+def test_mm3_pallas_nests_correct(small_states):
+    app = APPS["3mm"]()
+    st = small_states["3mm"]
+    ref = jax.jit(app.reference_fn())(st)
+    choice = {n.name: "pallas" for n in app.nests if "pallas" in n.impls}
+    out = jax.jit(app.build(choice))(st)
+    assert outputs_close(out, ref)
+
+
+def test_tdfir_pallas_fb_correct(small_states):
+    app = APPS["tdFIR"]()
+    st = small_states["tdFIR"]
+    ref = jax.jit(app.reference_fn())(st)
+    out = jax.jit(app.build({"tdfir_filter_bank": "pallas"}))(st)
+    assert outputs_close(out, ref)
+
+
+def test_fpga_narrowing_prefers_high_intensity(small_states):
+    from repro.core.intensity import narrow
+    app = APPS["3mm"]()
+    st = small_states["3mm"]
+    cands = narrow(app, st)
+    names = [p.nest.name for p in cands]
+    # the three matmul nests dominate arithmetic intensity
+    assert all(n.startswith("mm") for n in names), names
+
+
+def test_fpga_search_measures_at_most_four_patterns(small_states):
+    app = APPS["3mm"]()
+    st = small_states["3mm"]
+    ref = jax.jit(app.reference_fn())(st)
+    res = fpga_search(app, FPGA, TimedRunner(repeats=1), st, ref, st)
+    assert res.n_measurements <= 4

@@ -1,0 +1,81 @@
+"""Function-block discovery: DB name matching + Deckard-style similarity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import APPS, registry
+from repro.core import jaxpr_tools
+from repro.core.function_blocks import detect, apply_matches
+from repro.core.measure import outputs_close
+
+
+def test_detect_tdfir_by_name():
+    app = APPS["tdFIR"]()
+    matches = detect(app)
+    assert any(m.entry.name == "tdfir" and m.method == "name"
+               for m in matches)
+
+
+def test_detect_tdfir_by_similarity_when_renamed():
+    """Deckard path: strip the name, detection must still find it."""
+    app = APPS["tdFIR"]()
+    fir_nest = app.nests[0]
+    fir_nest.name = "mystery_block_A"           # defeat name matching
+    small = app.make_inputs(seed=0, small=True)
+    matches = detect(app, small_state=small)
+    hit = [m for m in matches if m.entry.name == "tdfir"]
+    assert hit and hit[0].method == "similarity", \
+        [(m.entry.name, m.method, m.score) for m in matches]
+    assert hit[0].score >= 0.55
+
+
+def test_apply_matches_replaces_and_stays_correct():
+    app = APPS["tdFIR"]()
+    small = app.make_inputs(seed=0, small=True)
+    ref = jax.jit(app.reference_fn())(small)
+    matches = detect(app, small_state=small)
+    choice = apply_matches(app, matches, "pallas")
+    assert choice is not None
+    out = jax.jit(app.build(choice))(small)
+    assert outputs_close(out, ref)
+
+
+def test_similarity_identical_is_one():
+    def f(x):
+        return jnp.tanh(x @ x.T).sum()
+    a = jaxpr_tools.fn_fingerprint(f, jnp.ones((4, 4)))
+    assert jaxpr_tools.similarity(a, a) == 1.0
+
+
+def test_similarity_unrelated_is_low():
+    def f(x):
+        return jnp.tanh(x @ x.T).sum()
+
+    def g(x):
+        return jnp.sort(x, axis=0)[0]
+    a = jaxpr_tools.fn_fingerprint(f, jnp.ones((4, 4)))
+    b = jaxpr_tools.fn_fingerprint(g, jnp.ones((4, 4)))
+    assert jaxpr_tools.similarity(a, b) < 0.3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from("abcdefg"), min_size=1, max_size=30),
+       st.lists(st.sampled_from("abcdefg"), min_size=1, max_size=30))
+def test_similarity_bounds_and_symmetry(s1, s2):
+    f1 = jaxpr_tools.fingerprint(s1)
+    f2 = jaxpr_tools.fingerprint(s2)
+    s12 = jaxpr_tools.similarity(f1, f2)
+    s21 = jaxpr_tools.similarity(f2, f1)
+    assert 0.0 <= s12 <= 1.0
+    assert s12 == s21
+    if s1 == s2:
+        assert s12 == 1.0
+
+
+def test_flop_estimate_counts_matmul():
+    def f(a, b):
+        return a @ b
+    fl = jaxpr_tools.flop_estimate(f, jnp.ones((8, 16)), jnp.ones((16, 4)))
+    assert fl == pytest.approx(2 * 8 * 16 * 4, rel=0.2)

@@ -1,0 +1,120 @@
+"""GA engine: paper-exact behaviour + hypothesis invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ga import Evaluation, GAConfig, PENALTY_TIME_S, run_ga
+
+
+def eval_from_time(t, correct=True, timeout=False):
+    return Evaluation(time_s=t, correct=correct, timed_out=timeout)
+
+
+def test_fitness_is_inverse_sqrt_time():
+    e = eval_from_time(4.0)
+    assert e.fitness == pytest.approx(0.5)
+    assert eval_from_time(1.0).fitness == pytest.approx(1.0)
+
+
+def test_wrong_result_gets_penalty_time():
+    e = eval_from_time(0.001, correct=False)
+    assert e.effective_time == PENALTY_TIME_S
+    assert e.fitness == pytest.approx(PENALTY_TIME_S ** -0.5)
+
+
+def test_timeout_gets_penalty_time():
+    e = eval_from_time(500.0, correct=True, timeout=True)
+    assert e.effective_time == PENALTY_TIME_S
+
+
+def test_ga_finds_all_ones_optimum():
+    # time decreases with number of offloaded loops -> optimum all-ones
+    def evaluate(genes):
+        return eval_from_time(10.0 / (1 + sum(genes)))
+
+    cfg = GAConfig(population=8, generations=8, seed=0)
+    res = run_ga(8, evaluate, cfg)
+    assert sum(res.best_genes) >= 7            # near-optimal
+    assert res.best_eval.effective_time <= 10.0 / 8 * 1.3
+
+
+def test_ga_avoids_unsafe_gene():
+    # gene 2 is "wrong parallelization": fast but incorrect
+    def evaluate(genes):
+        if genes[2] == 1:
+            return eval_from_time(0.01, correct=False)
+        return eval_from_time(1.0 / (1 + sum(genes)))
+
+    cfg = GAConfig(population=6, generations=6, seed=1)
+    res = run_ga(6, evaluate, cfg)
+    assert res.best_genes[2] == 0
+    assert res.best_eval.correct
+
+
+def test_population_rule_from_gene_length():
+    cfg = GAConfig.for_gene_length(6)
+    assert cfg.population == 6 and cfg.generations == 6   # paper: tdFIR 6/6
+    cfg = GAConfig.for_gene_length(120)
+    assert cfg.population <= 20                           # paper: NAS.BT 20
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 10_000))
+def test_ga_best_is_min_over_all_evaluations(gene_len, seed):
+    """The reported best equals the true min over every measured pattern."""
+    import random
+    r = random.Random(seed)
+    table = {}
+
+    def evaluate(genes):
+        if genes not in table:
+            table[genes] = eval_from_time(r.uniform(0.1, 10.0),
+                                          correct=r.random() > 0.2)
+        return table[genes]
+
+    cfg = GAConfig(population=min(gene_len, 6),
+                   generations=min(gene_len, 6), seed=seed)
+    res = run_ga(gene_len, evaluate, cfg)
+    true_best = min(e.effective_time for e in res.evaluations.values())
+    assert res.best_eval.effective_time == true_best
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_ga_elite_monotone_best(seed):
+    """Per-generation best time never increases (elite selection)."""
+    import random
+    r = random.Random(seed)
+
+    def evaluate(genes):
+        return eval_from_time(r.uniform(0.1, 10.0))
+
+    res = run_ga(6, evaluate, GAConfig(population=6, generations=6,
+                                       seed=seed))
+    bests = [h["best_time_s"] for h in res.history]
+    assert all(b2 <= b1 + 1e-12 for b1, b2 in zip(bests, bests[1:]))
+
+
+def test_ga_deterministic_given_seed():
+    def evaluate(genes):
+        return eval_from_time(1.0 + sum(genes) * 0.1)
+
+    a = run_ga(5, evaluate, GAConfig(population=5, generations=5, seed=42))
+    b = run_ga(5, evaluate, GAConfig(population=5, generations=5, seed=42))
+    assert a.best_genes == b.best_genes
+    assert [h["best_time_s"] for h in a.history] == \
+        [h["best_time_s"] for h in b.history]
+
+
+def test_ga_categorical_genes():
+    cards = [3, 4, 2]
+
+    def evaluate(genes):
+        return eval_from_time(1.0 + abs(genes[0] - 2) + abs(genes[1] - 3)
+                              + genes[2])
+
+    cfg = GAConfig(population=6, generations=10, seed=0,
+                   cardinalities=cards)
+    res = run_ga(3, evaluate, cfg)
+    assert res.best_genes == (2, 3, 0)

@@ -1,0 +1,77 @@
+"""Mixed-destination planner: six verifications, ordering, early stop,
+residual rule (paper §II.C)."""
+import pytest
+
+from repro.apps import APPS
+from repro.core.destinations import VERIFICATION_ORDER
+from repro.core.ga import GAConfig
+from repro.core.measure import TimedRunner
+from repro.core.planner import UserTarget, plan_offload
+
+
+@pytest.fixture(scope="module")
+def tdfir_report():
+    app = APPS["tdFIR"]()
+    return plan_offload(
+        app, UserTarget(),
+        inputs=app.make_inputs(0, small=True),
+        runner=TimedRunner(repeats=1),
+        ga_cfg=GAConfig(population=3, generations=3, seed=0))
+
+
+def test_verification_order_is_papers(tdfir_report):
+    methods = [(r.paper_analogue, r.method) for r in tdfir_report.records]
+    want = [(d.paper_analogue, m) for d, m in VERIFICATION_ORDER]
+    assert methods == want[:len(methods)]
+    # FB verifications strictly before loop verifications
+    kinds = [r.method for r in tdfir_report.records]
+    if "loop" in kinds:
+        assert kinds.index("loop") >= kinds.count("function_block")
+
+
+def test_all_six_run_without_target(tdfir_report):
+    assert len(tdfir_report.records) == 6
+    assert not tdfir_report.early_stopped
+    assert tdfir_report.selected is not None
+
+
+def test_early_stop_on_met_target():
+    app = APPS["tdFIR"]()
+    report = plan_offload(
+        app, UserTarget(target_speedup=0.1),    # trivially met
+        inputs=app.make_inputs(0, small=True),
+        runner=TimedRunner(repeats=1),
+        ga_cfg=GAConfig(population=3, generations=3, seed=0))
+    assert report.early_stopped
+    assert len(report.records) < 6
+
+
+def test_price_constraint_blocks_early_stop():
+    app = APPS["tdFIR"]()
+    report = plan_offload(
+        app, UserTarget(target_speedup=0.1, max_price=0.5),  # price never ok
+        inputs=app.make_inputs(0, small=True),
+        runner=TimedRunner(repeats=1),
+        ga_cfg=GAConfig(population=3, generations=3, seed=0))
+    assert not report.early_stopped
+    assert len(report.records) == 6
+
+
+def test_residual_rule_pins_fb_choice(tdfir_report):
+    """After FB offload succeeds, loop searches keep the FB nest pinned."""
+    fb = [r for r in tdfir_report.records if r.method == "function_block"
+          and r.best_time_s < float("inf")]
+    loops = [r for r in tdfir_report.records if r.method == "loop"]
+    if fb and loops:
+        best_fb = min(fb, key=lambda r: r.best_time_s)
+        if best_fb.best_time_s < tdfir_report.ref_time_s:
+            pinned = next(iter(best_fb.choice))
+            for r in loops:
+                assert r.choice.get(pinned) == best_fb.choice[pinned]
+
+
+def test_selected_is_fastest(tdfir_report):
+    finite = [r for r in tdfir_report.records
+              if r.best_time_s < float("inf")]
+    assert tdfir_report.selected.best_time_s == \
+        min(r.best_time_s for r in finite)

@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the paper's system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import APPS
+from repro.core.ga import GAConfig
+from repro.core.measure import TimedRunner
+from repro.core.planner import UserTarget, plan_offload
+
+
+def test_end_to_end_mixed_destination_selection():
+    """The headline behaviour (paper Fig.3): each app gets a destination and
+    the selected pattern is correct + at least as fast as single-core."""
+    runner = TimedRunner(repeats=1)
+    for name in APPS:
+        app = APPS[name]()
+        report = plan_offload(
+            app, UserTarget(), inputs=app.make_inputs(0, small=True),
+            runner=runner, ga_cfg=GAConfig(population=3, generations=3,
+                                           seed=0))
+        assert report.selected is not None, name
+        assert report.selected.best_time_s <= report.ref_time_s * 1.5, name
+        assert len(report.records) == 6, name
+
+
+def test_training_loss_decreases_end_to_end(tmp_path):
+    """Reduced-model training through the fault-tolerant runtime."""
+    from repro.launch.train import main
+    res = main(["--arch", "granite-3-2b", "--reduced", "--steps", "25",
+                "--batch", "4", "--seq", "64", "--save-every", "10",
+                "--ckpt-dir", str(tmp_path), "--log-every", "100"])
+    losses = [h["loss"] for h in res.metrics_history if "loss" in h]
+    assert losses[-1] < losses[0] - 0.2
+
+
+def test_training_resumes_from_checkpoint(tmp_path):
+    from repro.launch.train import main
+    main(["--arch", "granite-3-2b", "--reduced", "--steps", "10",
+          "--batch", "2", "--seq", "32", "--save-every", "5",
+          "--ckpt-dir", str(tmp_path), "--log-every", "100"])
+    # second invocation resumes at step 10 and continues to 15
+    res = main(["--arch", "granite-3-2b", "--reduced", "--steps", "15",
+                "--batch", "2", "--seq", "32", "--save-every", "5",
+                "--ckpt-dir", str(tmp_path), "--log-every", "100"])
+    steps = [h["step"] for h in res.metrics_history]
+    assert steps and min(steps) >= 10
+
+
+def test_serving_generates_tokens():
+    from repro.launch.serve import generate
+    from repro.configs import get_config
+    from repro.models.lm import Model
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                          cfg.vocab_size)}
+    out = generate(model, params, batch, prompt_len=8, gen=4,
+                   cache_len=16)
+    assert out.shape == (2, 4)
+    assert int(out.max()) < cfg.padded_vocab
+
+
+def test_plan_genes_roundtrip():
+    from repro.dist.plan import Plan
+    p = Plan(remat="full", microbatches=4, grad_compression=True)
+    genes = p.to_genes()
+    q = Plan.from_genes(genes)
+    assert q.remat == "full" and q.microbatches == 4
+    assert q.grad_compression is True
+    assert len(genes) == len(Plan.gene_cardinalities())
