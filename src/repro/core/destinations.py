@@ -19,13 +19,17 @@ class Destination:
     paper_analogue: str
     price: float          # relative $ (paper ordering: GPU < many-core < FPGA)
     verify_time: float    # relative verification cost (CPU < GPU < FPGA)
+    # mesh analogue consumed by repro.dist.bridge: "data" verifications
+    # compile data-parallel, "model" tensor-parallel, "" has no mesh bridge
+    # (the FPGA analogue is a kernel substitution, not a sharding).
+    mesh_role: str = ""
 
 
 MANY_CORE = Destination(key="dp", name="xla_dp",
                         paper_analogue="many-core CPU",
-                        price=1.2, verify_time=1.0)
+                        price=1.2, verify_time=1.0, mesh_role="data")
 GPU = Destination(key="tp", name="sharded_tp", paper_analogue="GPU",
-                  price=1.0, verify_time=1.5)
+                  price=1.0, verify_time=1.5, mesh_role="model")
 FPGA = Destination(key="pallas", name="pallas_kernel",
                    paper_analogue="FPGA",
                    price=2.0, verify_time=10.0)

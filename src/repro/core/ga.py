@@ -44,11 +44,14 @@ class Evaluation:
     correct: bool
     timed_out: bool = False
     info: dict = field(default_factory=dict)
+    # paper's "wrong result or timeout => 1000 s"; configurable through
+    # GAConfig.penalty_s (run_ga stamps it onto every evaluation it makes)
+    penalty_s: float = PENALTY_TIME_S
 
     @property
     def effective_time(self) -> float:
         if not self.correct or self.timed_out:
-            return PENALTY_TIME_S
+            return self.penalty_s
         return self.time_s
 
     @property
@@ -82,7 +85,9 @@ def run_ga(gene_length: int,
 
     def ev(genes: Tuple[int, ...]) -> Evaluation:
         if genes not in cache:
-            cache[genes] = evaluate(genes)
+            e = evaluate(genes)
+            e.penalty_s = cfg.penalty_s
+            cache[genes] = e
         return cache[genes]
 
     # initial population: all-zeros (the no-offload baseline is always a
@@ -142,6 +147,13 @@ def run_ga(gene_length: int,
                     break
         pop = new_pop
 
-    best = min(cache.items(), key=lambda kv: kv[1].effective_time)
+    # final selection: a wrong result must never *win* the search, no
+    # matter how small the configured penalty is — the penalty shapes
+    # selection pressure inside the GA, not the returned pattern.  Fall
+    # back to raw effective_time only when nothing was correct.
+    valid = [kv for kv in cache.items()
+             if kv[1].correct and not kv[1].timed_out]
+    pool = valid or list(cache.items())
+    best = min(pool, key=lambda kv: kv[1].effective_time)
     return GAResult(best_genes=best[0], best_eval=best[1], history=history,
                     evaluations=cache)

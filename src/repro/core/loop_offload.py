@@ -28,10 +28,16 @@ class LoopSearchResult:
     verify_elapsed_s: float
     history: List[dict] = field(default_factory=list)
     note: str = ""
+    best_correct: bool = True     # False: best_time_s is a penalty, not a
+                                  # usable pattern (planner must not select)
 
 
-def _measure_choice(app, choice, runner, inputs, ref_out) -> Evaluation:
-    return runner.measure(app.build(choice), inputs, ref_out)
+def _measure_choice(app, choice, runner, inputs, ref_out,
+                    penalty_s: Optional[float] = None) -> Evaluation:
+    ev = runner.measure(app.build(choice), inputs, ref_out)
+    if penalty_s is not None:
+        ev.penalty_s = penalty_s      # one penalty scale per planner run
+    return ev
 
 
 def ga_search(app: OffloadableApp, dest: Destination, runner: TimedRunner,
@@ -46,11 +52,13 @@ def ga_search(app: OffloadableApp, dest: Destination, runner: TimedRunner,
     fixed_choice = dict(fixed_choice or {})
     free_nests = [n for n in app.nests if n.name not in fixed_choice]
     gene_len = len(free_nests)
-    if gene_len == 0:
-        ev = _measure_choice(app, fixed_choice, runner, inputs, ref_out)
-        return LoopSearchResult(dest.name, fixed_choice, ev.effective_time,
-                                1, 0.0, note="no free loops")
     cfg = ga_cfg or GAConfig.for_gene_length(gene_len, seed=seed)
+    if gene_len == 0:
+        ev = _measure_choice(app, fixed_choice, runner, inputs, ref_out,
+                             penalty_s=cfg.penalty_s)
+        return LoopSearchResult(dest.name, fixed_choice, ev.effective_time,
+                                1, 0.0, note="no free loops",
+                                best_correct=ev.correct)
 
     def evaluate(genes: Tuple[int, ...]) -> Evaluation:
         choice = dict(fixed_choice)
@@ -70,13 +78,13 @@ def ga_search(app: OffloadableApp, dest: Destination, runner: TimedRunner,
         destination=dest.name, best_choice=best_choice,
         best_time_s=res.best_eval.effective_time,
         n_measurements=res.n_measurements, verify_elapsed_s=elapsed,
-        history=res.history)
+        history=res.history, best_correct=res.best_eval.correct)
 
 
 def fpga_search(app: OffloadableApp, dest: Destination, runner: TimedRunner,
                 inputs, ref_out, small_state,
-                fixed_choice: Optional[Dict[str, str]] = None
-                ) -> LoopSearchResult:
+                fixed_choice: Optional[Dict[str, str]] = None,
+                penalty_s: Optional[float] = None) -> LoopSearchResult:
     """Narrow-then-measure protocol (<= 4 measured patterns)."""
     fixed_choice = dict(fixed_choice or {})
     t0 = time.perf_counter()
@@ -87,7 +95,8 @@ def fpga_search(app: OffloadableApp, dest: Destination, runner: TimedRunner,
     for p in candidates[:3]:
         choice = dict(fixed_choice)
         choice[p.nest.name] = dest.key
-        ev = _measure_choice(app, choice, runner, inputs, ref_out)
+        ev = _measure_choice(app, choice, runner, inputs, ref_out,
+                             penalty_s=penalty_s)
         singles.append((p.nest.name, ev))
     results = list(singles)
     good = [s for s in singles if s[1].correct]
@@ -96,22 +105,29 @@ def fpga_search(app: OffloadableApp, dest: Destination, runner: TimedRunner,
         choice = dict(fixed_choice)
         choice[good[0][0]] = dest.key
         choice[good[1][0]] = dest.key
-        ev = _measure_choice(app, choice, runner, inputs, ref_out)
+        ev = _measure_choice(app, choice, runner, inputs, ref_out,
+                             penalty_s=penalty_s)
         results.append((f"{good[0][0]}+{good[1][0]}", ev))
     elapsed = time.perf_counter() - t0
 
     if not results:
-        ev = _measure_choice(app, fixed_choice, runner, inputs, ref_out)
+        ev = _measure_choice(app, fixed_choice, runner, inputs, ref_out,
+                             penalty_s=penalty_s)
         return LoopSearchResult(dest.name, fixed_choice, ev.effective_time,
-                                1, elapsed, note="no pallas-capable nests")
-    best_name, best_ev = min(results, key=lambda r: r[1].effective_time)
+                                1, elapsed, note="no pallas-capable nests",
+                                best_correct=ev.correct)
+    # as in run_ga: a wrong result never wins the search outright
+    correct_results = [r for r in results if r[1].correct]
+    best_name, best_ev = min(correct_results or results,
+                             key=lambda r: r[1].effective_time)
     best_choice = dict(fixed_choice)
-    for nm in best_name.split("+"):
-        if best_ev.correct:
+    if best_ev.correct:
+        for nm in best_name.split("+"):
             best_choice[nm] = dest.key
     history = [{"pattern": nm, "time_s": e.effective_time,
                 "correct": e.correct} for nm, e in results]
     return LoopSearchResult(
         destination=dest.name, best_choice=best_choice,
         best_time_s=best_ev.effective_time, n_measurements=len(results),
-        verify_elapsed_s=elapsed, history=history)
+        verify_elapsed_s=elapsed, history=history,
+        best_correct=best_ev.correct)

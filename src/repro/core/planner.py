@@ -56,6 +56,14 @@ class VerificationRecord:
     met_target: bool
     choice: Dict[str, str] = field(default_factory=dict)
     note: str = ""
+    # False: best_time_s is the configured penalty for a wrong result /
+    # timeout — kept as evidence but never pinned, selected or early-stopped
+    correct: bool = True
+    # set when a CompiledCostRunner mesh-verified the winning candidate
+    # (repro.dist.bridge): the modeled step time under the destination's
+    # sharding, and the roofline breakdown behind it
+    mesh_time_s: Optional[float] = None
+    mesh_info: Dict = field(default_factory=dict)
 
 
 @dataclass
@@ -80,22 +88,48 @@ class PlanReport:
         return rows
 
 
+def _pin_best_fb(records: List[VerificationRecord],
+                 ref_time: float) -> Dict[str, str]:
+    """Residual rule state: the winning FB pattern, or {} if none won."""
+    fb_recs = [r for r in records
+               if r.method == "function_block" and r.correct
+               and r.best_time_s < float("inf")]
+    if not fb_recs:
+        return {}
+    best_fb = min(fb_recs, key=lambda r: r.best_time_s)
+    if best_fb.best_time_s < ref_time:
+        return dict(best_fb.choice)
+    return {}
+
+
 def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                  runner: Optional[TimedRunner] = None,
                  ga_cfg: Optional[GAConfig] = None,
                  small_state=None, inputs=None,
-                 registry=None) -> PlanReport:
+                 registry=None, cost_runner=None) -> PlanReport:
+    """Run the six verifications and select a destination.
+
+    ``cost_runner`` (a :class:`repro.core.measure.CompiledCostRunner`)
+    additionally compiles each dp / tp winner for the runner's mesh under
+    the destination's sharding (repro.dist.bridge) and records the modeled
+    step time on the VerificationRecord — the mixed-destination decision
+    then sees communication cost, not only unsharded host timing.
+    """
     runner = runner or TimedRunner()
     if inputs is None:
         inputs = app.make_inputs(seed=seed)
     if small_state is None:
         small_state = app.make_inputs(seed=seed, small=True)
 
-    # single-core reference (paper's "processing time by a single core")
+    # single-core reference (paper's "processing time by a single core");
+    # the measurement already ran the function — reuse its output instead of
+    # compiling and executing the reference a second time
     ref_fn = app.reference_fn()
     ref_eval = runner.measure(ref_fn, inputs, None)
-    import jax
-    ref_out = jax.jit(ref_fn)(inputs)
+    ref_out = ref_eval.info.get("output")
+    if ref_out is None:
+        import jax
+        ref_out = jax.jit(ref_fn)(inputs)
     ref_time = ref_eval.time_s
 
     # FB discovery once (name match + similarity), per paper [41]
@@ -104,9 +138,21 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
 
     records: List[VerificationRecord] = []
     fb_fixed: Dict[str, str] = {}       # residual rule state
+    fb_pinned = False
     early = False
+    # one penalty scale for every verification in this run (GA-internal
+    # evaluations get it via run_ga; direct measurements get it stamped)
+    penalty_s = ga_cfg.penalty_s if ga_cfg is not None else None
 
     for order, (dest, method) in enumerate(VERIFICATION_ORDER, start=1):
+        # residual rule: before the FIRST loop verification, pin the best
+        # FB pattern found by verifications 1-3 — regardless of how the
+        # FB verifications exited (a no-match FPGA FB verification must not
+        # skip the pinning of a many-core / GPU FB win).
+        if method == "loop" and not fb_pinned:
+            fb_pinned = True
+            fb_fixed = _pin_best_fb(records, ref_time)
+
         t0 = time.perf_counter()
         if method == "function_block":
             choice = function_blocks.apply_matches(app, matches, dest.key)
@@ -120,6 +166,8 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                     met_target=False, note="no offloadable function block"))
                 continue
             ev = runner.measure(app.build(choice), inputs, ref_out)
+            if penalty_s is not None:
+                ev.penalty_s = penalty_s
             rec = VerificationRecord(
                 order=order, destination=dest.name,
                 paper_analogue=dest.paper_analogue, method=method,
@@ -127,8 +175,9 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                 improvement=ref_time / max(ev.effective_time, 1e-12),
                 price=dest.price, n_measurements=1,
                 verify_elapsed_s=time.perf_counter() - t0,
-                met_target=targets.met(ev.effective_time, ref_time,
-                                       dest.price),
+                met_target=ev.correct and targets.met(
+                    ev.effective_time, ref_time, dest.price),
+                correct=ev.correct,
                 choice=dict(choice),
                 note="; ".join(f"{m.entry.name}@{m.nest.name}({m.method}"
                                f":{m.score:.2f})" for m in matches))
@@ -137,7 +186,7 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
             if dest.key == "pallas":
                 res = loop_offload.fpga_search(
                     app, dest, runner, inputs, ref_out, small_state,
-                    fixed_choice=fb_fixed)
+                    fixed_choice=fb_fixed, penalty_s=penalty_s)
             else:
                 res = loop_offload.ga_search(
                     app, dest, runner, inputs, ref_out,
@@ -149,27 +198,31 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                 improvement=ref_time / max(res.best_time_s, 1e-12),
                 price=dest.price, n_measurements=res.n_measurements,
                 verify_elapsed_s=res.verify_elapsed_s,
-                met_target=targets.met(res.best_time_s, ref_time,
-                                       dest.price),
+                met_target=res.best_correct and targets.met(
+                    res.best_time_s, ref_time, dest.price),
+                correct=res.best_correct,
                 choice=dict(res.best_choice), note=res.note)
             records.append(rec)
+
+        # mesh bridge: compile the dp / tp winner for an actual mesh and
+        # record the modeled (roofline) step time next to the host timing
+        if (cost_runner is not None and rec.correct
+                and rec.best_time_s < float("inf")):
+            from repro.dist import bridge
+            mesh_ev = bridge.mesh_verify(cost_runner, dest,
+                                         app.build(dict(rec.choice)), inputs)
+            if mesh_ev is not None and mesh_ev.correct:
+                rec.mesh_time_s = mesh_ev.time_s
+                rec.mesh_info = dict(mesh_ev.info)
 
         if rec.met_target:
             early = True
             break
 
-        # residual rule: after the FB verifications (first three), pin the
-        # best FB pattern before loop searches begin.
-        if order == 3:
-            fb_recs = [r for r in records
-                       if r.method == "function_block"
-                       and r.best_time_s < float("inf")]
-            if fb_recs:
-                best_fb = min(fb_recs, key=lambda r: r.best_time_s)
-                if best_fb.best_time_s < ref_time:
-                    fb_fixed = dict(best_fb.choice)
-
-    done = [r for r in records if r.best_time_s < float("inf")]
+    # selection: correct patterns only; a penalized wrong result is never
+    # the chosen destination (it stays in records as evidence)
+    done = [r for r in records
+            if r.correct and r.best_time_s < float("inf")]
     selected = min(done, key=lambda r: r.best_time_s) if done else None
     return PlanReport(app=app.name, ref_time_s=ref_time, records=records,
                       selected=selected, early_stopped=early)

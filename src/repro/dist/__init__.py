@@ -1,0 +1,23 @@
+"""Parallelism-plan subsystem: the framework-side "environment-adaptive"
+configuration layer (paper §II.C applied to the mesh, DESIGN.md §2).
+
+Public API (stable — later PRs build on this):
+
+  * :mod:`repro.dist.plan`      — :class:`Plan` execution-plan dataclass with
+    the categorical ``GENE_SPACE`` the GA searches (``from_genes`` /
+    ``to_genes`` / ``gene_cardinalities``).
+  * :mod:`repro.dist.sharding`  — :class:`Rules` (logical-axis -> mesh-axis
+    mapping with divisibility / duplicate-axis fallback), :class:`NullRules`,
+    ``tree_shardings`` and ``batch_axes``.
+  * :mod:`repro.dist.pipeline`  — ``pipeline_apply`` / ``sequential_apply``
+    (GPipe-style stage parallelism over the "pod" axis).
+  * :mod:`repro.dist.bridge`    — planner <-> mesh bridge: compile a
+    dp / tp candidate under a real mesh via ``CompiledCostRunner``.
+  * :mod:`repro.dist.compat`    — JAX version shims (``shard_map``,
+    ``make_mesh``, ``AxisType``) so the same call sites run on the
+    installed runtime and on current JAX.
+"""
+from repro.dist.plan import Plan
+from repro.dist.sharding import NullRules, Rules, batch_axes, tree_shardings
+
+__all__ = ["Plan", "Rules", "NullRules", "tree_shardings", "batch_axes"]

@@ -1,0 +1,70 @@
+"""Planner <-> mesh bridge (paper §II.C meets the real mesh).
+
+The planner's verification environment times candidates unsharded
+(:class:`TimedRunner`).  For the destinations that are *mesh analogues* —
+"dp" (many-core CPU: data parallel) and "tp" (GPU: tensor parallel) — this
+module compiles the candidate for an actual mesh and scores the produced
+artifact with :meth:`CompiledCostRunner.measure`, so destination selection
+can see collective/communication cost instead of only single-host timing.
+
+A destination advertises its mesh analogue via ``Destination.mesh_role``
+("data" | "model" | ""); the bridge derives input shardings from it:
+
+  * data role — leading dimension of every input over the batch axes;
+  * model role — trailing dimension over the "model" axis.
+
+Both inherit :class:`Rules`' divisibility fallback, so odd shapes replicate
+instead of failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.dist.plan import Plan
+from repro.dist.sharding import Rules, tree_shardings
+
+# Plan templates the dp / tp verifications compile under.
+DEST_PLANS = {
+    "data": Plan(name="verify-dp", remat="none"),
+    "model": Plan(name="verify-tp", remat="none"),
+}
+
+
+def state_axes(state, mesh_role: str):
+    """Logical-axes pytree for an offloadable app's input state dict."""
+
+    def axes_for(x):
+        ndim = getattr(x, "ndim", 0)
+        if ndim == 0:
+            return ()
+        if mesh_role == "data":
+            return ("batch",) + (None,) * (ndim - 1)
+        return (None,) * (ndim - 1) + ("ff",)      # "ff" -> model axis
+
+    return jax.tree.map(axes_for, state)
+
+
+def dest_rules(dest, mesh) -> Optional[Rules]:
+    role = getattr(dest, "mesh_role", "")
+    if not role or role not in DEST_PLANS:
+        return None
+    return Rules(mesh, DEST_PLANS[role])
+
+
+def mesh_verify(cost_runner, dest, fn, inputs):
+    """Compile ``fn(inputs)`` for ``cost_runner.mesh`` under the
+    destination's sharding and return the roofline Evaluation, or None when
+    the destination has no mesh analogue (e.g. the FPGA/pallas one)."""
+    if cost_runner is None or getattr(cost_runner, "mesh", None) is None:
+        return None
+    rules = dest_rules(dest, cost_runner.mesh)
+    if rules is None:
+        return None
+    axes = state_axes(inputs, dest.mesh_role)
+    sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype)
+        if hasattr(x, "shape") else x, inputs)
+    in_shardings = tree_shardings(rules, axes, sds)
+    return cost_runner.measure(fn, sds, in_shardings=(in_shardings,))

@@ -1,0 +1,112 @@
+"""JAX version shims.
+
+The repo targets the current JAX sharding API (``jax.shard_map`` with
+``axis_names`` / ``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``); the pinned runtime may predate those.  Every
+call site goes through this module so exactly one place knows both idioms.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+
+import jax
+import numpy as np
+
+try:                                        # jax >= 0.5.1
+    from jax.sharding import AxisType
+    _HAS_AXIS_TYPES = True
+except ImportError:
+    _HAS_AXIS_TYPES = False
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, axis_types=None, devices=None):
+    """``jax.make_mesh`` with ``axis_types`` where supported.
+
+    Older JAX either rejects the kwarg or (0.4.x) expects a different
+    dict-style value, so it is only forwarded when the new-API enum exists;
+    Auto is the default there anyway.
+    """
+    if axis_types is not None and _HAS_AXIS_TYPES:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, devices=devices)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def mesh_from_devices(devices, shape, axis_names, axis_types=None):
+    """Mesh over an explicit device list reshaped to ``shape``."""
+    arr = np.asarray(devices).reshape(shape)
+    if axis_types is not None and _HAS_AXIS_TYPES:
+        try:
+            return jax.sharding.Mesh(arr, axis_names, axis_types=axis_types)
+        except TypeError:
+            pass
+    return jax.sharding.Mesh(arr, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    """New-style ``jax.shard_map`` signature on any supported JAX.
+
+    ``axis_names`` is the set of *manual* axes (new-API semantics).  On older
+    JAX it is translated to the complementary ``auto`` set, and ``check_vma``
+    to ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # Old XLA hard-crashes when nontrivial computations sit in a
+    # partially-manual region (hlo_sharding_util IsManualSubgroup check),
+    # so the fallback runs fully manual: axes the specs never mention are
+    # replicated, which preserves numerics at the cost of redundant
+    # within-group compute.  New JAX keeps the real partial-manual path.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma), auto=frozenset())
+
+
+# Can with_sharding_constraint reference Auto mesh axes from inside a
+# partially-manual shard_map region?  Old XLA hard-crashes on it
+# (hlo_sharding_util Check failure), so callers that nest Rules.constrain
+# under a shard_map must drop to NullRules when this is False.
+PARTIAL_MANUAL_CONSTRAINTS = hasattr(jax, "shard_map")
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on any JAX (older
+    versions return a one-element list of per-device dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``with set_mesh(m):`` — activates ``m`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        ctx = jax.set_mesh(mesh)
+        if hasattr(ctx, "__enter__"):
+            with ctx:
+                yield mesh
+        else:                               # set_mesh is a plain setter
+            prev = getattr(jax.sharding, "get_abstract_mesh",
+                           lambda: None)()
+            try:
+                yield mesh
+            finally:
+                jax.set_mesh(prev)          # restore the enclosing mesh
+        return
+    with mesh:
+        yield mesh

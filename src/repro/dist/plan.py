@@ -1,0 +1,93 @@
+"""Execution plans: the framework-side offload pattern the GA searches.
+
+A :class:`Plan` bundles every knob that changes how one step function is
+*executed* without changing what it computes — remat policy, microbatching,
+gradient compression, attention blocking, MoE dispatch flavor, decode-cache
+layout.  It is the framework analogue of the paper's per-loop gene string:
+``GENE_SPACE`` lists the categorical genes, and ``from_genes`` /
+``to_genes`` convert between a plan and the GA's integer encoding (see
+``repro.core.ga`` and ``examples/autoplan_model.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclass
+class Plan:
+    name: str = "default"
+    # --- training-step execution -----------------------------------------
+    remat: str = "block"                 # none | block | full
+    microbatches: int = 1
+    grad_compression: bool = False       # int8 + error feedback on "pod" psum
+    vocab_chunk: int = 0                 # 0 = full-vocab xent
+    opt_state_dtype: str = "float32"
+    # --- attention --------------------------------------------------------
+    gqa_grouped: bool = True
+    blockwise_attn_threshold: int = 1024  # seq >= threshold -> blockwise
+    attn_block_q: int = 512
+    attn_block_kv: int = 512
+    # --- MoE --------------------------------------------------------------
+    moe_impl: str = "gspmd"              # gspmd | shardmap_ep
+    moe_capacity_factor: Optional[float] = None
+    moe_groups: int = 1
+    # --- SSM --------------------------------------------------------------
+    ssd_chunk: int = 0
+    ssd_bf16: bool = False
+    # --- serving ----------------------------------------------------------
+    kv_cache_quant: bool = False
+    decode_kv_seq_shard: bool = False    # shard kv_seq (not kv_heads) on model
+
+    # ------------------------------------------------------------- genes
+    @classmethod
+    def gene_cardinalities(cls) -> List[int]:
+        return [len(choices) for _, choices in _GENE_SPACE]
+
+    @classmethod
+    def from_genes(cls, genes: Sequence[int], name: str = "ga-candidate"
+                   ) -> "Plan":
+        kw = {}
+        for (field_name, choices), g in zip(_GENE_SPACE, genes):
+            kw[field_name] = choices[int(g) % len(choices)]
+        return cls(name=name, **kw)
+
+    def to_genes(self) -> List[int]:
+        genes = []
+        for field_name, choices in _GENE_SPACE:
+            v = getattr(self, field_name)
+            genes.append(choices.index(v) if v in choices else 0)
+        return genes
+
+
+# Categorical gene space for the framework-side GA: (field, choices) pairs.
+# Order is part of the public API: gene i of an individual indexes
+# _GENE_SPACE[i][1].  Exposed as the plain class attribute Plan.GENE_SPACE
+# (not a dataclass field, so dataclasses.asdict stays JSON-clean).
+_GENE_SPACE: Tuple[Tuple[str, tuple], ...] = (
+    ("remat", ("none", "block", "full")),
+    ("microbatches", (1, 2, 4, 8)),
+    ("grad_compression", (False, True)),
+    ("vocab_chunk", (0, 512, 2048)),
+    ("gqa_grouped", (True, False)),
+    ("blockwise_attn_threshold", (512, 1024, 1 << 30)),
+    ("attn_block_q", (256, 512)),
+    ("attn_block_kv", (256, 512)),
+    ("moe_impl", ("gspmd", "shardmap_ep")),
+    ("decode_kv_seq_shard", (False, True)),
+)
+
+# make the class attribute readable without an instance too
+Plan.GENE_SPACE = _GENE_SPACE
+
+
+# --------------------------------------------------------------------------
+# Named plans (referenced by --plan <name> in repro.launch.dryrun).
+# --------------------------------------------------------------------------
+
+TRAIN_TIGHT_MEM = Plan(name="train-tight-mem", remat="full", microbatches=4,
+                       vocab_chunk=512)
+CROSS_POD_COMPRESSED = Plan(name="cross-pod-compressed",
+                            grad_compression=True)
+SERVE_LOW_MEM = Plan(name="serve-low-mem", remat="none", kv_cache_quant=True,
+                     decode_kv_seq_shard=True)

@@ -136,7 +136,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     compiled = lowered.compile()
     t_compile = time.time() - t0
 
-    ca = compiled.cost_analysis() or {}
+    from repro.dist.compat import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
     from repro.core.hlo_analysis import analyze_hlo

@@ -104,6 +104,8 @@ from repro.launch.mesh import make_test_mesh
 from repro.train.grad_compression import (compressed_psum, plain_psum,
                                           init_error_feedback)
 
+from repro.dist.compat import shard_map
+
 mesh = make_test_mesh((8,), ('pod',))
 
 def body(g, ef):
@@ -113,8 +115,8 @@ def body(g, ef):
 
 g = jax.random.normal(jax.random.PRNGKey(0), (8, 256)) * 0.1
 ef = jnp.zeros((8, 256))
-f = jax.shard_map(body, mesh=mesh, in_specs=(P('pod'), P('pod')),
-                  out_specs=(P('pod'), P('pod'), P('pod')))
+f = shard_map(body, mesh=mesh, in_specs=(P('pod'), P('pod')),
+              out_specs=(P('pod'), P('pod'), P('pod')))
 out, new_ef, exact = f(g, ef)
 rel = float(jnp.abs(out - exact).max() / (jnp.abs(exact).max() + 1e-9))
 assert rel < 0.05, ('FAIL rel', rel)
@@ -167,11 +169,10 @@ from repro.dist.plan import Plan
 from repro.dist.sharding import Rules
 from repro.models.lm import Model
 from repro.train import optimizer, train_step as ts
-from jax.sharding import AxisType, Mesh
-import numpy as np
-mesh = Mesh(np.asarray(jax.devices()).reshape(2, 2, 2),
-            ('pod', 'data', 'model'),
-            axis_types=(AxisType.Auto,) * 3)
+from repro.dist.compat import AxisType, mesh_from_devices, set_mesh
+mesh = mesh_from_devices(jax.devices(), (2, 2, 2),
+                         ('pod', 'data', 'model'),
+                         axis_types=(AxisType.Auto,) * 3)
 cfg = get_config('granite-3-2b').reduced()
 plan = Plan(grad_compression=True, vocab_chunk=8)
 tcfg = TrainConfig(lr=1e-3, warmup_steps=1)
@@ -182,7 +183,7 @@ opt['ef'] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 batch = {'tokens': jnp.ones((8, 16), jnp.int32),
          'labels': jnp.ones((8, 16), jnp.int32)}
 step = ts.make_pod_parallel_train_step(model, tcfg, mesh)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     p2, o2, m = jax.jit(step)(params, opt, batch, jnp.int32(0))
 import math
 assert math.isfinite(float(m['loss'])), 'FAIL loss'
@@ -222,11 +223,11 @@ print('ok', d)
 def test_pipeline_parallel_matches_sequential():
     run_multidevice("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, Mesh
+from repro.dist.compat import AxisType, mesh_from_devices
 from repro.dist.pipeline import pipeline_apply, sequential_apply
 
-mesh = Mesh(np.asarray(jax.devices()[:4]).reshape(4,), ('pod',),
-            axis_types=(AxisType.Auto,))
+mesh = mesh_from_devices(jax.devices()[:4], (4,), ('pod',),
+                         axis_types=(AxisType.Auto,))
 S, B, D = 4, 8, 16
 ws = jax.random.normal(jax.random.PRNGKey(0), (S, D, D)) * 0.3
 x = jax.random.normal(jax.random.PRNGKey(1), (B, D))

@@ -2,6 +2,8 @@
 import math
 
 import pytest
+
+pytest.importorskip("hypothesis")   # minimal envs: skip, don't fail collect
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ga import Evaluation, GAConfig, PENALTY_TIME_S, run_ga

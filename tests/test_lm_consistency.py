@@ -139,6 +139,7 @@ def test_int8_kv_cache_close_to_exact():
 def test_ring_place_preserves_last_tokens():
     """Property: ring placement keeps exactly the last W tokens, each at
     slot t % W."""
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
     from repro.models.lm import _ring_place
 
@@ -157,6 +158,7 @@ def test_ring_place_preserves_last_tokens():
 
 
 def test_quantize_kv_error_bound():
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
     from repro.models.layers import quantize_kv
 

@@ -1,0 +1,174 @@
+"""Regression tests for the planner / GA verification-flow bugs.
+
+  * residual rule: a no-match FPGA FB verification (verification 3) used to
+    `continue` past the pinning block, so loop searches ignored the winning
+    many-core / GPU FB patterns;
+  * GAConfig.penalty_s was silently dropped (Evaluation hard-coded the
+    module constant);
+  * the single-core reference was compiled and executed twice.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.function_blocks import FunctionBlockEntry, Registry
+from repro.core.ga import (Evaluation, GAConfig, PENALTY_TIME_S, run_ga)
+from repro.core.measure import TimedRunner
+from repro.core.offloadable import LoopNest, OffloadableApp
+from repro.core.planner import UserTarget, plan_offload
+
+
+class ScriptedRunner:
+    """Deterministic verification environment: the app encodes its own
+    "processing time" in the output scalar, so planner ordering logic can
+    be tested without wall-clock noise."""
+
+    def measure(self, fn, inputs, reference_out):
+        out = fn(inputs)
+        return Evaluation(time_s=float(out), correct=True,
+                          info={"output": out})
+
+
+def _scripted_app_and_registry():
+    """One nest, FB impls for dp/tp only (no pallas) -> verification 3 has
+    no offloadable function block.  seq=1.0, loop impls=0.8, FB impls=0.5
+    (times are the output values ScriptedRunner reads back)."""
+
+    def stage(value):
+        def impl(state):
+            s = dict(state)
+            s["out"] = jnp.float32(value)
+            return s
+        return impl
+
+    nest = LoopNest(name="conv_stage",
+                    impls={"seq": stage(1.0), "dp": stage(0.8),
+                           "tp": stage(0.8), "pallas": stage(0.8)})
+    app = OffloadableApp(
+        name="scripted",
+        nests=[nest],
+        make_inputs=lambda seed=0, small=False: {"x": jnp.ones((4,))})
+
+    registry = Registry()
+    registry.register(FunctionBlockEntry(
+        name="convblock",
+        match_names=("conv",),
+        ref_fn=lambda state: state["x"],
+        example_args=lambda: ({"x": jnp.ones((4,))},),
+        impls={"dp": stage(0.5), "tp": stage(0.5)}))   # no pallas FB
+    return app, registry
+
+
+def test_fb_pinned_when_verification_3_has_no_match():
+    app, registry = _scripted_app_and_registry()
+    report = plan_offload(app, UserTarget(), runner=ScriptedRunner(),
+                          ga_cfg=GAConfig(population=2, generations=2),
+                          registry=registry)
+    assert len(report.records) == 6
+    fb3 = report.records[2]
+    assert fb3.method == "function_block"
+    assert fb3.best_time_s == float("inf")          # no pallas FB impl
+    assert "no offloadable function block" in fb3.note
+    # the dp FB win (0.5 < ref 1.0) must be pinned into the loop searches
+    for rec in report.records[3:]:
+        assert rec.method == "loop"
+        assert rec.choice.get("conv_stage", "").startswith("fb_convblock_"), \
+            (rec.order, rec.choice)
+
+
+def test_reference_executed_once():
+    """plan_offload reuses the measured reference output instead of
+    compiling + running the reference a second time."""
+    app, registry = _scripted_app_and_registry()
+    calls = {"ref": 0}
+    orig_build = app.build
+
+    def counting_build(choice):
+        fn = orig_build(choice)
+        if not choice:                              # the reference pattern
+            def wrapped(state):
+                calls["ref"] += 1
+                return fn(state)
+            return wrapped
+        return fn
+
+    app.build = counting_build
+    plan_offload(app, UserTarget(), runner=ScriptedRunner(),
+                 ga_cfg=GAConfig(population=2, generations=2),
+                 registry=registry)
+    assert calls["ref"] == 1
+
+
+def test_timed_runner_returns_output_and_reference_is_correct():
+    ev = TimedRunner(repeats=1).measure(
+        lambda s: s["x"] * 2.0, {"x": jnp.arange(4.0)}, None)
+    assert ev.correct                      # reference run: trivially correct
+    assert "output" in ev.info
+    assert float(jax.numpy.sum(ev.info["output"])) == pytest.approx(12.0)
+
+
+# ------------------------------------------------------------- GA penalty
+def test_custom_penalty_changes_effective_time():
+    assert Evaluation(time_s=1.0, correct=False).effective_time \
+        == PENALTY_TIME_S
+    assert Evaluation(time_s=1.0, correct=False,
+                      penalty_s=7.0).effective_time == 7.0
+    assert Evaluation(time_s=1.0, correct=False, penalty_s=7.0).fitness \
+        == pytest.approx(7.0 ** -0.5)
+    # correct evaluations are unaffected
+    assert Evaluation(time_s=1.0, correct=True,
+                      penalty_s=7.0).effective_time == 1.0
+
+
+def test_run_ga_threads_config_penalty():
+    def evaluate(genes):
+        # gene (1,) is "correct" and slow; everything else is wrong
+        if genes == (1,):
+            return Evaluation(time_s=50.0, correct=True)
+        return Evaluation(time_s=0.001, correct=False)
+
+    cfg = GAConfig(population=2, generations=2, penalty_s=10.0, seed=0)
+    res = run_ga(1, evaluate, cfg)
+    wrong = [e for e in res.evaluations.values() if not e.correct]
+    assert wrong, "expected the all-zeros baseline to be evaluated"
+    for e in wrong:
+        assert e.effective_time == 10.0     # not the 1000 s module default
+    # the configured penalty shapes selection pressure, but a wrong result
+    # must never WIN the search, even with penalty 10 < 50
+    assert res.best_genes == (1,)
+    assert res.best_eval.correct and res.best_eval.effective_time == 50.0
+
+
+def test_run_ga_all_wrong_falls_back_to_penalized_best():
+    def evaluate(genes):
+        return Evaluation(time_s=0.001, correct=False)
+
+    cfg = GAConfig(population=2, generations=2, penalty_s=10.0, seed=0)
+    res = run_ga(1, evaluate, cfg)
+    assert not res.best_eval.correct
+    assert res.best_eval.effective_time == 10.0
+
+
+def test_penalty_threads_through_planner_measurements():
+    """Every verification in one plan_offload run sees the configured
+    penalty scale, not only the GA-internal evaluations."""
+    app, registry = _scripted_app_and_registry()
+
+    class WrongRunner(ScriptedRunner):
+        def measure(self, fn, inputs, reference_out):
+            ev = super().measure(fn, inputs, reference_out)
+            if reference_out is not None:      # every candidate is "wrong"
+                ev.correct = False
+            return ev
+
+    report = plan_offload(app, UserTarget(), runner=WrongRunner(),
+                          ga_cfg=GAConfig(population=2, generations=2,
+                                          penalty_s=7.0),
+                          registry=registry)
+    finite = [r for r in report.records if r.best_time_s < float("inf")]
+    assert finite
+    for rec in finite:                        # FB, GA-loop and FPGA-loop
+        assert rec.best_time_s == 7.0, (rec.order, rec.best_time_s)
+        assert not rec.correct
+    # and a penalized wrong result is never the selected destination
+    assert report.selected is None

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")   # minimal envs: skip, don't fail collect
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint.checkpointer import Checkpointer

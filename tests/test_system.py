@@ -12,7 +12,8 @@ from repro.core.planner import UserTarget, plan_offload
 def test_end_to_end_mixed_destination_selection():
     """The headline behaviour (paper Fig.3): each app gets a destination and
     the selected pattern is correct + at least as fast as single-core."""
-    runner = TimedRunner(repeats=1)
+    runner = TimedRunner(repeats=3)   # min-of-3: sub-ms timings are noisy
+                                      # under full-suite load
     for name in APPS:
         app = APPS[name]()
         report = plan_offload(
