@@ -47,7 +47,7 @@ def bench_inputs(app_name, app):
     return app.make_inputs(seed=0)
 
 
-def table_fig3():
+def table_fig3(policy: str = "host-time"):
     from repro.apps import APPS
     from repro.core.ga import GAConfig
     from repro.core.measure import TimedRunner
@@ -61,13 +61,26 @@ def table_fig3():
         report = plan_offload(
             app, UserTarget(), inputs=inputs,
             runner=TimedRunner(repeats=1),
-            ga_cfg=GAConfig.for_gene_length(app.gene_length, seed=0))
+            ga_cfg=GAConfig.for_gene_length(app.gene_length, seed=0),
+            policy=policy)
         sel = report.selected
         emit(f"fig3/{name}/single_core", report.ref_time_s * 1e6,
              "reference")
+        if sel is None:      # every candidate wrong/penalized on this host
+            emit(f"fig3/{name}/selected", float("nan"),
+                 f"no-correct-candidate|policy={report.policy}")
+            results[name] = {
+                "ref_time_s": report.ref_time_s, "policy": report.policy,
+                "plan_elapsed_s": time.time() - t0,
+                "records": [r.__dict__ | {"choice": dict(r.choice)}
+                            for r in report.records],
+                "selected": None,
+                "summary_rows": report.summary_rows(),
+            }
+            continue
         emit(f"fig3/{name}/selected", sel.best_time_s * 1e6,
              f"{sel.paper_analogue}|{sel.method}|"
-             f"improvement={sel.improvement:.1f}x")
+             f"improvement={sel.improvement:.1f}x|policy={report.policy}")
         others = sorted((r for r in report.records if r is not sel
                          and r.best_time_s < float("inf")),
                         key=lambda r: r.best_time_s)
@@ -78,10 +91,12 @@ def table_fig3():
                  f"improvement={o.improvement:.1f}x")
         results[name] = {
             "ref_time_s": report.ref_time_s,
+            "policy": report.policy,
             "plan_elapsed_s": time.time() - t0,
             "records": [r.__dict__ | {"choice": dict(r.choice)}
                         for r in report.records],
             "selected": sel.__dict__ | {"choice": dict(sel.choice)},
+            "summary_rows": report.summary_rows(),
         }
     (OUT_DIR / "fig3_results.json").write_text(
         json.dumps(results, indent=1, default=str))
@@ -207,10 +222,17 @@ def table_modeled_fig3():
 
 
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="host-time",
+                    help="destination-selection policy for the fig. 3 "
+                         "table (repro.backends.policy): host-time | "
+                         "modeled | price-weighted | power")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
     table_kernels()
     table_ga_convergence()
-    table_fig3()
+    table_fig3(policy=args.policy)
     table_modeled_fig3()
     table_roofline()
 

@@ -21,11 +21,23 @@ def main():
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--generations", type=int, default=4)
     ap.add_argument("--population", type=int, default=5)
+    ap.add_argument("--compile-workers", type=int, default=4,
+                    help="threads compiling one generation's candidates")
+    ap.add_argument("--policy", default="modeled",
+                    help="plan-selection policy (repro.backends.policy): "
+                         "modeled / host-time rank pure modeled step time; "
+                         "price-weighted / power also weight each plan's "
+                         "per-device memory traffic (a machine-size / "
+                         "power-envelope proxy)")
     args = ap.parse_args()
+
+    import time
+    from concurrent.futures import ThreadPoolExecutor
 
     import jax
     import jax.numpy as jnp
 
+    from repro.backends import get_policy
     from repro.configs import get_config
     from repro.configs.base import ShapeConfig, TrainConfig
     from repro.core.ga import Evaluation, GAConfig, run_ga
@@ -41,39 +53,89 @@ def main():
     mesh = make_test_mesh((4, 2))
     tcfg = TrainConfig()
     runner = CompiledCostRunner(mesh)
+    pol = get_policy(args.policy)
+
+    def lower_candidate(genes):
+        """Trace + lower one plan candidate (no XLA compilation yet)."""
+        plan = Plan.from_genes(list(genes))
+        rules = Rules(mesh, plan)
+        model = Model(cfg, plan, rules)
+        params_sds = jax.eval_shape(
+            model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        p_sh = tree_shardings(rules, param_axes(cfg), params_sds)
+        opt_sds = jax.eval_shape(lambda p: optimizer.init(p, tcfg),
+                                 params_sds)
+        batch_sds = {
+            "tokens": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32),
+            "labels": jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len), jnp.int32)}
+        fn = ts.make_train_step(model, tcfg)
+        jitted = jax.jit(fn, in_shardings=(p_sh, None, None, None))
+        return jitted.lower(params_sds, opt_sds, batch_sds,
+                            jax.ShapeDtypeStruct((), jnp.int32))
+
+    def evaluate_batch(generation):
+        """Score a whole GA generation: lower every candidate first, then
+        compile the lowered artifacts concurrently, then roofline-score —
+        instead of the serial lower/compile/score per candidate."""
+        lowered = []
+        for genes in generation:
+            try:
+                lowered.append(lower_candidate(genes))
+            except Exception as e:
+                lowered.append(Evaluation(time_s=float("inf"), correct=False,
+                                          info={"error": repr(e)[:200]}))
+
+        def compile_one(item):
+            if isinstance(item, Evaluation):     # lowering already failed
+                return item
+            try:
+                t0 = time.perf_counter()
+                compiled = item.compile()
+                return runner.score_compiled(compiled,
+                                             time.perf_counter() - t0)
+            except Exception as e:
+                return Evaluation(time_s=float("inf"), correct=False,
+                                  info={"error": repr(e)[:200]})
+
+        workers = max(1, min(args.compile_workers, len(lowered)))
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            return list(ex.map(compile_one, lowered))
 
     def evaluate(genes):
-        plan = Plan.from_genes(list(genes))
-        try:
-            rules = Rules(mesh, plan)
-            model = Model(cfg, plan, rules)
-            params_sds = jax.eval_shape(
-                model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
-            p_sh = tree_shardings(rules, param_axes(cfg), params_sds)
-            opt_sds = jax.eval_shape(lambda p: optimizer.init(p, tcfg),
-                                     params_sds)
-            batch_sds = {
-                "tokens": jax.ShapeDtypeStruct(
-                    (shape.global_batch, shape.seq_len), jnp.int32),
-                "labels": jax.ShapeDtypeStruct(
-                    (shape.global_batch, shape.seq_len), jnp.int32)}
-            fn = ts.make_train_step(model, tcfg)
-            jitted = jax.jit(fn, in_shardings=(p_sh, None, None, None))
-            return runner.measure_lowered(
-                jitted, params_sds, opt_sds, batch_sds,
-                jax.ShapeDtypeStruct((), jnp.int32))
-        except Exception as e:
-            return Evaluation(time_s=float("inf"), correct=False,
-                              info={"error": repr(e)[:200]})
+        return evaluate_batch([genes])[0]
 
     cards = Plan.gene_cardinalities()
     cfg_ga = GAConfig(population=args.population,
                       generations=args.generations, seed=0,
                       cardinalities=cards)
-    res = run_ga(len(cards), evaluate, cfg_ga)
-    best = Plan.from_genes(list(res.best_genes))
-    print(f"\nbest plan for {args.arch} (modeled step "
-          f"{res.best_eval.time_s*1e6:.1f} us on {mesh.shape}):")
+    res = run_ga(len(cards), evaluate, cfg_ga,
+                 evaluate_batch=evaluate_batch)
+
+    # policy selection over every compiled candidate: price is proxied by
+    # the plan's per-device memory traffic (relative to the leanest
+    # candidate), so price-weighted / power prefer memory-lean plans when
+    # their modeled step time is close
+    valid_bytes = [x.info["roofline"]["bytes_per_device"]
+                   for x in res.evaluations.values()
+                   if x.correct and "roofline" in x.info]
+    base_bytes = max(min(valid_bytes), 1.0) if valid_bytes else 1.0
+
+    def price_proxy(e):
+        return e.info["roofline"]["bytes_per_device"] / base_bytes
+
+    scored = [(pol.score_parts(e.time_s, price=price_proxy(e),
+                               modeled_s=e.time_s), genes, e)
+              for genes, e in res.evaluations.items()
+              if e.correct and "roofline" in e.info]
+    if scored:
+        _, best_genes, best_eval = min(scored, key=lambda s: s[0])
+    else:
+        best_genes, best_eval = res.best_genes, res.best_eval
+    best = Plan.from_genes(list(best_genes))
+    print(f"\nbest plan for {args.arch} under policy={pol.name} "
+          f"(modeled step {best_eval.time_s*1e6:.1f} us on {mesh.shape}):")
     for name, _ in Plan.GENE_SPACE:
         print(f"  {name:22s} = {getattr(best, name)}")
     print(f"measured {res.n_measurements} compiled candidates")

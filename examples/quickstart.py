@@ -26,6 +26,12 @@ def main():
                     help="full paper sizes (slower)")
     ap.add_argument("--target-speedup", type=float, default=None)
     ap.add_argument("--max-price", type=float, default=None)
+    ap.add_argument("--policy", default="host-time",
+                    help="destination-selection policy "
+                         "(repro.backends.policy): host-time (paper's "
+                         "fastest-correct rule) | modeled (rank by "
+                         "mesh-verified roofline when recorded) | "
+                         "price-weighted | power")
     args = ap.parse_args()
 
     target = UserTarget(target_speedup=args.target_speedup,
@@ -36,9 +42,10 @@ def main():
         report = plan_offload(
             app, target, inputs=inputs, runner=TimedRunner(repeats=1),
             ga_cfg=GAConfig.for_gene_length(min(app.gene_length, 6),
-                                            seed=0))
+                                            seed=0),
+            policy=args.policy)
         print(f"\n=== {name} ===  single-core: "
-              f"{report.ref_time_s*1e3:.2f} ms"
+              f"{report.ref_time_s*1e3:.2f} ms  [policy={report.policy}]"
               f"{'  (early stop)' if report.early_stopped else ''}")
         for r in report.records:
             mark = " <== selected" if r is report.selected else ""

@@ -46,20 +46,37 @@ def fig3_md() -> str:
         return "(run `python -m benchmarks.run` first)\n"
     res = json.loads(p.read_text())
     out = ["| app | single-core | selected destination | method | time | "
-           "improvement | runner-up |", "|---|---|---|---|---|---|---|"]
+           "modeled (mesh) | improvement | correct | runner-up |",
+           "|---|---|---|---|---|---|---|---|---|"]
+
+    def modeled_of(rec):
+        m = rec.get("mesh_time_s")
+        try:
+            return f"{float(m)*1e6:.1f} us"
+        except (TypeError, ValueError):
+            return "—"
+
     for app, r in res.items():
         sel = r["selected"]
+        if sel is None:      # no correct candidate survived verification
+            out.append(f"| {app} | {r['ref_time_s']*1e3:.2f} ms | — | — "
+                       f"| — | — | — | all penalized | — |")
+            continue
         others = sorted((x for x in r["records"]
                          if x["best_time_s"] < 1e30
                          and x["order"] != sel["order"]),
                         key=lambda x: x["best_time_s"])
         runner = (f"{others[0]['paper_analogue']}/{others[0]['method']} "
                   f"x{others[0]['improvement']:.1f}" if others else "—")
+        n_penalized = sum(not x.get("correct", True) for x in r["records"])
+        correct = ("yes" if sel.get("correct", True) else "PENALIZED")
+        if n_penalized:
+            correct += f" ({n_penalized} penalized rec.)"
         out.append(
             f"| {app} | {r['ref_time_s']*1e3:.2f} ms "
             f"| **{sel['paper_analogue']}** | {sel['method']} "
-            f"| {sel['best_time_s']*1e3:.2f} ms "
-            f"| x{sel['improvement']:.2f} | {runner} |")
+            f"| {sel['best_time_s']*1e3:.2f} ms | {modeled_of(sel)} "
+            f"| x{sel['improvement']:.2f} | {correct} | {runner} |")
     return "\n".join(out) + "\n"
 
 

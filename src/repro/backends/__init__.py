@@ -1,0 +1,39 @@
+"""Pluggable offload-backend API (paper §II.C as configuration).
+
+Public surface (stable — later PRs build on this):
+
+  * :mod:`repro.backends.base`     — :class:`Backend` (identity + ``search``
+    strategy + ``mesh_verify`` hook), :class:`SearchContext`,
+    :class:`SearchResult`.
+  * :mod:`repro.backends.registry` — :class:`BackendRegistry`; its
+    ``verification_order()`` derives the paper's six-verification order from
+    declared ``verify_time`` / ``methods``.
+  * :mod:`repro.backends.builtin`  — the three built-in backends
+    (``MANY_CORE``, ``GPU``, ``FPGA``) and ``DEFAULT_REGISTRY``.
+  * :mod:`repro.backends.policy`   — :class:`SelectionPolicy` and the
+    built-in objectives (``host-time``, ``modeled``, ``price-weighted``,
+    ``power``); ``get_policy`` / ``register_policy``.
+
+``repro.core.destinations`` remains a thin compatibility shim over this
+package (``ALL`` / ``VERIFICATION_ORDER`` / ``Destination``).
+"""
+from repro.backends.base import (Backend, SearchContext, SearchResult,
+                                 METHOD_FUNCTION_BLOCK, METHOD_LOOP,
+                                 METHOD_ORDER)
+from repro.backends.registry import BackendRegistry
+from repro.backends.builtin import (DEFAULT_REGISTRY, FPGA, GPU, MANY_CORE,
+                                    default_registry)
+from repro.backends.policy import (DEFAULT_POLICY, POLICIES, SelectionPolicy,
+                                   HostTimePolicy, ModeledPolicy,
+                                   PowerPolicy, PriceWeightedPolicy,
+                                   get_policy, register_policy)
+
+__all__ = [
+    "Backend", "SearchContext", "SearchResult",
+    "METHOD_FUNCTION_BLOCK", "METHOD_LOOP", "METHOD_ORDER",
+    "BackendRegistry", "DEFAULT_REGISTRY", "default_registry",
+    "MANY_CORE", "GPU", "FPGA",
+    "SelectionPolicy", "HostTimePolicy", "ModeledPolicy",
+    "PriceWeightedPolicy", "PowerPolicy",
+    "POLICIES", "DEFAULT_POLICY", "get_policy", "register_policy",
+]

@@ -1,0 +1,51 @@
+"""Built-in backends: the TPU-native mapping of the paper's {many-core CPU,
+GPU, FPGA} mixed destination environment (DESIGN.md §2).
+
+Price ordering follows the paper ("the central price range is the ascending
+order of GPU, many core CPU and FPGA") and verification-time ordering too
+("many core CPU, GPU and FPGA"); both are declared per backend and consumed
+by the registry's derived order + the planner's early-stop logic, not their
+absolute values.
+"""
+from __future__ import annotations
+
+from repro.backends.base import Backend, SearchContext, SearchResult
+from repro.backends.registry import BackendRegistry
+
+
+def ga_loop_search(backend: Backend, app, ctx: SearchContext) -> SearchResult:
+    """Full-GA loop strategy (paper §II.B.1) — many-core CPU / GPU
+    analogues."""
+    from repro.core import loop_offload
+    return loop_offload.ga_search(
+        app, backend, ctx.runner, ctx.inputs, ctx.ref_out,
+        fixed_choice=ctx.fixed_choice, ga_cfg=ctx.ga_cfg, seed=ctx.seed)
+
+
+def intensity_loop_search(backend: Backend, app,
+                          ctx: SearchContext) -> SearchResult:
+    """Narrow-then-measure loop strategy (paper §II.B.3) — FPGA analogue:
+    arithmetic-intensity narrowing, <= 4 measured patterns."""
+    from repro.core import loop_offload
+    return loop_offload.fpga_search(
+        app, backend, ctx.runner, ctx.inputs, ctx.ref_out, ctx.small_state,
+        fixed_choice=ctx.fixed_choice, penalty_s=ctx.penalty_s)
+
+
+MANY_CORE = Backend(key="dp", name="xla_dp",
+                    paper_analogue="many-core CPU",
+                    price=1.2, verify_time=1.0, mesh_role="data",
+                    search_fn=ga_loop_search)
+GPU = Backend(key="tp", name="sharded_tp", paper_analogue="GPU",
+              price=1.0, verify_time=1.5, mesh_role="model",
+              search_fn=ga_loop_search)
+FPGA = Backend(key="pallas", name="pallas_kernel",
+               paper_analogue="FPGA",
+               price=2.0, verify_time=10.0,
+               search_fn=intensity_loop_search)
+
+DEFAULT_REGISTRY = BackendRegistry([MANY_CORE, GPU, FPGA])
+
+
+def default_registry() -> BackendRegistry:
+    return DEFAULT_REGISTRY

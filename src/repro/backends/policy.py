@@ -1,0 +1,106 @@
+"""Selection policies: how the planner ranks verified destinations.
+
+The paper selects the fastest correct pattern by measured host wall-clock
+(``host-time``).  Yamato's follow-ups change the *objective* without
+changing the pipeline — power-efficient selection (arXiv 2110.11520), cost
+awareness — so the objective is a pluggable :class:`SelectionPolicy`:
+
+  * ``host-time``       — today's behavior: min measured ``best_time_s``.
+  * ``modeled``         — min ``mesh_time_s`` when a mesh verification
+    recorded one (so dp/tp candidates are ranked by the compiled-artifact
+    roofline, communication cost included), host time as fallback for
+    destinations without a mesh analogue.
+  * ``price-weighted``  — min ``best_time_s × price``: throughput per
+    relative dollar, using the paper's price ordering.
+  * ``power``           — stub for the power-objective follow-up: energy is
+    proxied as ``price × time`` (device price tracks its power envelope),
+    preferring the modeled time when present.
+
+Every policy ranks only *correct, finite* records — a penalized wrong
+result can never be the chosen destination, whatever the objective.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Union
+
+
+class SelectionPolicy:
+    """Rank verification records; lower ``score`` wins."""
+
+    name: str = "base"
+
+    def score_parts(self, time_s: float, price: float = 1.0,
+                    modeled_s: Optional[float] = None) -> float:
+        """Ranking key from raw parts (also used by repro.launch.dryrun to
+        rank mesh cells, where ``price`` is the chip count)."""
+        raise NotImplementedError
+
+    def score(self, record) -> float:
+        """Ranking key for a planner VerificationRecord (duck-typed:
+        ``best_time_s`` / ``price`` / ``mesh_time_s``)."""
+        return self.score_parts(record.best_time_s, record.price,
+                                getattr(record, "mesh_time_s", None))
+
+    def select(self, records: List):
+        """The winning record, or None when nothing is correct + finite."""
+        done = [r for r in records
+                if r.correct and r.best_time_s < float("inf")]
+        return min(done, key=self.score) if done else None
+
+
+class HostTimePolicy(SelectionPolicy):
+    name = "host-time"
+
+    def score_parts(self, time_s, price=1.0, modeled_s=None):
+        return time_s
+
+
+class ModeledPolicy(SelectionPolicy):
+    name = "modeled"
+
+    def score_parts(self, time_s, price=1.0, modeled_s=None):
+        return modeled_s if modeled_s is not None else time_s
+
+
+class PriceWeightedPolicy(SelectionPolicy):
+    name = "price-weighted"
+
+    def score_parts(self, time_s, price=1.0, modeled_s=None):
+        return time_s * price
+
+
+class PowerPolicy(SelectionPolicy):
+    name = "power"
+
+    def score_parts(self, time_s, price=1.0, modeled_s=None):
+        t = modeled_s if modeled_s is not None else time_s
+        return t * price
+
+
+POLICIES: Dict[str, SelectionPolicy] = {}
+
+
+def register_policy(policy: SelectionPolicy) -> SelectionPolicy:
+    POLICIES[policy.name] = policy
+    return policy
+
+
+for _p in (HostTimePolicy(), ModeledPolicy(), PriceWeightedPolicy(),
+           PowerPolicy()):
+    register_policy(_p)
+
+DEFAULT_POLICY = "host-time"
+
+
+def get_policy(policy: Union[str, SelectionPolicy, None]) -> SelectionPolicy:
+    """Resolve a policy name (or pass an instance through)."""
+    if policy is None:
+        return POLICIES[DEFAULT_POLICY]
+    if isinstance(policy, SelectionPolicy):
+        return policy
+    try:
+        return POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown selection policy {policy!r}; "
+            f"known: {sorted(POLICIES)}") from None

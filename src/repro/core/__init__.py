@@ -1,5 +1,8 @@
 """Paper core: GA-driven automatic offloading to a mixed destination
 environment (Yamato 2020), adapted to TPU execution strategies."""
+from repro.backends import (Backend, BackendRegistry, SearchContext,
+                            SearchResult, SelectionPolicy, get_policy,
+                            register_policy)
 from repro.core.ga import GAConfig, GAResult, Evaluation, run_ga
 from repro.core.destinations import (Destination, MANY_CORE, GPU, FPGA,
                                      VERIFICATION_ORDER)
@@ -11,6 +14,8 @@ from repro.core import (cost_model, function_blocks, hlo_analysis, intensity,
 
 __all__ = [
     "GAConfig", "GAResult", "Evaluation", "run_ga",
+    "Backend", "BackendRegistry", "SearchContext", "SearchResult",
+    "SelectionPolicy", "get_policy", "register_policy",
     "Destination", "MANY_CORE", "GPU", "FPGA", "VERIFICATION_ORDER",
     "LoopNest", "OffloadableApp",
     "TimedRunner", "CompiledCostRunner",

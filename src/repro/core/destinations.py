@@ -1,51 +1,39 @@
-"""Offloading destinations: the TPU-native mapping of {many-core CPU, GPU,
-FPGA} (DESIGN.md §2).
+"""Compatibility shim over :mod:`repro.backends`.
 
-Price ordering follows the paper ("the central price range is the ascending
-order of GPU, many core CPU and FPGA") and verification-time ordering too
-("many core CPU, GPU and FPGA"); both are configurable because the planner's
-early-stop logic consumes them, not their absolute values.
+The destination layer was redesigned into the pluggable backend API
+(``repro.backends``): identity + search strategy + mesh hook live on
+:class:`repro.backends.Backend`, and the paper's §II.C verification order is
+*derived* by ``BackendRegistry.verification_order()`` from each backend's
+declared ``verify_time`` / ``methods`` instead of a hardcoded list.
+
+The pre-redesign names keep working:
+
+  * ``Destination``        — alias of :class:`repro.backends.Backend`;
+  * ``MANY_CORE / GPU / FPGA`` — the built-in backend instances;
+  * ``ALL / BY_NAME / BY_ANALOGUE`` — snapshots of the default registry,
+    taken at import time;
+  * ``VERIFICATION_ORDER`` — the derived order of the default registry at
+    import time (still exactly the paper's six verifications).
+
+Backends registered on ``DEFAULT_REGISTRY`` *after* this module is imported
+appear in the planner's live ``verification_order()`` but not in these
+snapshots — new code should consume :mod:`repro.backends` directly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict, List
 
+from repro.backends.base import Backend as Destination
+from repro.backends.builtin import DEFAULT_REGISTRY, FPGA, GPU, MANY_CORE
 
-@dataclass(frozen=True)
-class Destination:
-    key: str              # impl key inside LoopNest.impls
-    name: str
-    paper_analogue: str
-    price: float          # relative $ (paper ordering: GPU < many-core < FPGA)
-    verify_time: float    # relative verification cost (CPU < GPU < FPGA)
-    # mesh analogue consumed by repro.dist.bridge: "data" verifications
-    # compile data-parallel, "model" tensor-parallel, "" has no mesh bridge
-    # (the FPGA analogue is a kernel substitution, not a sharding).
-    mesh_role: str = ""
+ALL: List[Destination] = list(DEFAULT_REGISTRY)
+BY_NAME: Dict[str, Destination] = DEFAULT_REGISTRY.by_name
+BY_ANALOGUE: Dict[str, Destination] = DEFAULT_REGISTRY.by_analogue
 
+# Paper §II.C verification order — derived, no longer hardcoded: FB first
+# (can be faster when a match exists), FPGA last (slowest to verify); within
+# each method: many-core CPU, GPU, FPGA.
+VERIFICATION_ORDER = DEFAULT_REGISTRY.verification_order()
 
-MANY_CORE = Destination(key="dp", name="xla_dp",
-                        paper_analogue="many-core CPU",
-                        price=1.2, verify_time=1.0, mesh_role="data")
-GPU = Destination(key="tp", name="sharded_tp", paper_analogue="GPU",
-                  price=1.0, verify_time=1.5, mesh_role="model")
-FPGA = Destination(key="pallas", name="pallas_kernel",
-                   paper_analogue="FPGA",
-                   price=2.0, verify_time=10.0)
-
-ALL: List[Destination] = [MANY_CORE, GPU, FPGA]
-BY_NAME: Dict[str, Destination] = {d.name: d for d in ALL}
-BY_ANALOGUE: Dict[str, Destination] = {d.paper_analogue: d for d in ALL}
-
-# Paper §II.C verification order: FB first (can be faster when a match
-# exists), FPGA last (slowest to verify); within each method: many-core CPU,
-# GPU, FPGA.
-VERIFICATION_ORDER = [
-    (MANY_CORE, "function_block"),
-    (GPU, "function_block"),
-    (FPGA, "function_block"),
-    (MANY_CORE, "loop"),
-    (GPU, "loop"),
-    (FPGA, "loop"),
-]
+__all__ = ["Destination", "MANY_CORE", "GPU", "FPGA",
+           "ALL", "BY_NAME", "BY_ANALOGUE", "VERIFICATION_ORDER"]

@@ -73,7 +73,13 @@ class GAResult:
 
 def run_ga(gene_length: int,
            evaluate: Callable[[Tuple[int, ...]], Evaluation],
-           cfg: GAConfig) -> GAResult:
+           cfg: GAConfig,
+           evaluate_batch: Optional[
+               Callable[[List[Tuple[int, ...]]], List[Evaluation]]] = None
+           ) -> GAResult:
+    """``evaluate_batch``, when given, scores a whole generation's unseen
+    individuals in one call (e.g. batching XLA lowering/compilation across
+    the population); ``evaluate`` remains the per-individual fallback."""
     rng = random.Random(cfg.seed)
     cards = list(cfg.cardinalities or [2] * gene_length)
     assert len(cards) == gene_length
@@ -90,6 +96,17 @@ def run_ga(gene_length: int,
             cache[genes] = e
         return cache[genes]
 
+    def ev_population(pop: List[Tuple[int, ...]]) -> List[Evaluation]:
+        fresh = [g for g in dict.fromkeys(pop) if g not in cache]
+        if fresh and evaluate_batch is not None:
+            evs = evaluate_batch(fresh)
+            assert len(evs) == len(fresh), \
+                "evaluate_batch must return one Evaluation per individual"
+            for g, e in zip(fresh, evs):
+                e.penalty_s = cfg.penalty_s
+                cache[g] = e
+        return [ev(g) for g in pop]
+
     # initial population: all-zeros (the no-offload baseline is always a
     # candidate) + random individuals, de-duplicated when possible
     pop: List[Tuple[int, ...]] = [tuple([0] * gene_length)]
@@ -102,7 +119,7 @@ def run_ga(gene_length: int,
 
     history: List[dict] = []
     for gen in range(cfg.generations):
-        evals = [ev(g) for g in pop]
+        evals = ev_population(pop)
         fits = [e.fitness for e in evals]
         best_i = max(range(len(pop)), key=lambda i: fits[i])
         history.append({

@@ -9,27 +9,17 @@ are measured, exactly the paper's protocol.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
+from repro.backends.base import Backend as Destination, SearchResult
 from repro.core import ga as ga_mod, intensity
-from repro.core.destinations import Destination
 from repro.core.ga import Evaluation, GAConfig, GAResult
 from repro.core.measure import TimedRunner
 from repro.core.offloadable import OffloadableApp
 
-
-@dataclass
-class LoopSearchResult:
-    destination: str
-    best_choice: Dict[str, str]
-    best_time_s: float
-    n_measurements: int
-    verify_elapsed_s: float
-    history: List[dict] = field(default_factory=list)
-    note: str = ""
-    best_correct: bool = True     # False: best_time_s is a penalty, not a
-                                  # usable pattern (planner must not select)
+# pre-redesign name for the per-verification result dataclass; the canonical
+# definition moved to repro.backends.base
+LoopSearchResult = SearchResult
 
 
 def _measure_choice(app, choice, runner, inputs, ref_out,

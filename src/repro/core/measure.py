@@ -97,11 +97,14 @@ class CompiledCostRunner:
         self.n_chips = n_chips or (mesh.size if mesh is not None else 1)
         self.model_flops = model_flops
 
-    def measure_lowered(self, jitted, *args_sds) -> Evaluation:
+    def score_compiled(self, compiled, verify_s: float = 0.0) -> Evaluation:
+        """Roofline-score an already-compiled executable.
+
+        Split from :meth:`measure_lowered` so callers that batch the XLA
+        lowering/compilation across a GA population (examples/
+        autoplan_model.py) can score the artifacts afterwards.
+        """
         try:
-            t0 = time.perf_counter()
-            compiled = jitted.lower(*args_sds).compile()
-            verify_s = time.perf_counter() - t0
             analyzed = analyze_hlo(compiled.as_text())
             rl = cost_model.roofline_terms(
                 analyzed["flops"], analyzed["bytes"],
@@ -113,6 +116,16 @@ class CompiledCostRunner:
         except Exception as e:
             return Evaluation(time_s=float("inf"), correct=False,
                               info={"error": repr(e)[:500]})
+
+    def measure_lowered(self, jitted, *args_sds) -> Evaluation:
+        try:
+            t0 = time.perf_counter()
+            compiled = jitted.lower(*args_sds).compile()
+            verify_s = time.perf_counter() - t0
+        except Exception as e:
+            return Evaluation(time_s=float("inf"), correct=False,
+                              info={"error": repr(e)[:500]})
+        return self.score_compiled(compiled, verify_s)
 
     def measure(self, fn: Callable, inputs_sds, in_shardings=None
                 ) -> Evaluation:

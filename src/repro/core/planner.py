@@ -1,24 +1,34 @@
 """Mixed-offloading-destination planner (paper §II.C) — the paper's main
-contribution.
+contribution, on top of the pluggable backend API (repro.backends).
 
-Runs the six verifications in the paper's order:
+The planner no longer knows the destinations: it iterates the verification
+order a :class:`~repro.backends.BackendRegistry` derives from each backend's
+declared ``verify_time`` / ``methods`` (for the built-in registry this is
+exactly the paper's six verifications:
   ① FB→many-core  ② FB→GPU  ③ FB→FPGA  ④ loops→many-core  ⑤ loops→GPU
-  ⑥ loops→FPGA
-with:
+  ⑥ loops→FPGA),
+delegates each verification to ``backend.search(app, ctx, method)``, and
+keeps:
   * early stop as soon as a pattern meets the user's performance and price
     targets,
   * the residual rule — once a function block is offloaded, the loop
-    verifications search only the remaining nests,
-  * the FPGA-analogue loop search using intensity narrowing instead of a GA.
+    verifications search only the remaining nests.
+
+Final selection is a pluggable :class:`~repro.backends.SelectionPolicy`
+(``policy=``): ``host-time`` reproduces the paper's fastest-correct-pattern
+rule; ``modeled`` ranks by the mesh-verified roofline time when a
+``cost_runner`` recorded one; ``price-weighted`` / ``power`` weight by the
+destination's relative price.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
-from repro.core import function_blocks, loop_offload
-from repro.core.destinations import (Destination, VERIFICATION_ORDER)
+from repro.backends import (BackendRegistry, SearchContext, SelectionPolicy,
+                            default_registry, get_policy)
+from repro.core import function_blocks
 from repro.core.ga import GAConfig
 from repro.core.measure import TimedRunner
 
@@ -73,6 +83,7 @@ class PlanReport:
     records: List[VerificationRecord]
     selected: Optional[VerificationRecord]
     early_stopped: bool
+    policy: str = "host-time"       # name of the selection policy applied
 
     def summary_rows(self):
         rows = []
@@ -81,8 +92,11 @@ class PlanReport:
                 "app": self.app, "order": r.order,
                 "destination": r.paper_analogue, "method": r.method,
                 "time_s": round(r.best_time_s, 6),
+                "mesh_time_s": (None if r.mesh_time_s is None
+                                else round(r.mesh_time_s, 6)),
                 "improvement": round(r.improvement, 2),
                 "price": r.price, "n_meas": r.n_measurements,
+                "correct": r.correct,
                 "selected": self.selected is r,
             })
         return rows
@@ -106,16 +120,31 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                  runner: Optional[TimedRunner] = None,
                  ga_cfg: Optional[GAConfig] = None,
                  small_state=None, inputs=None,
-                 registry=None, cost_runner=None) -> PlanReport:
-    """Run the six verifications and select a destination.
+                 registry=None, cost_runner=None,
+                 backends: Optional[BackendRegistry] = None,
+                 policy: Union[str, SelectionPolicy, None] = None
+                 ) -> PlanReport:
+    """Run the registry's verifications and select a destination.
+
+    ``backends`` (a :class:`repro.backends.BackendRegistry`) supplies the
+    destinations and their search strategies; the default registry holds the
+    paper's three.  ``registry`` stays the *function-block* registry
+    (paper's DB).
 
     ``cost_runner`` (a :class:`repro.core.measure.CompiledCostRunner`)
     additionally compiles each dp / tp winner for the runner's mesh under
-    the destination's sharding (repro.dist.bridge) and records the modeled
-    step time on the VerificationRecord — the mixed-destination decision
-    then sees communication cost, not only unsharded host timing.
+    the destination's sharding (each backend's ``mesh_verify`` hook) and
+    records the modeled step time on the VerificationRecord — the
+    mixed-destination decision then sees communication cost, not only
+    unsharded host timing.
+
+    ``policy`` names the :class:`~repro.backends.SelectionPolicy` ranking
+    the verified destinations (default ``host-time``, the paper's rule;
+    ``modeled`` consumes the recorded ``mesh_time_s``).
     """
     runner = runner or TimedRunner()
+    backends = backends if backends is not None else default_registry()
+    pol = get_policy(policy)
     if inputs is None:
         inputs = app.make_inputs(seed=seed)
     if small_state is None:
@@ -136,81 +165,50 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
     matches = function_blocks.detect(
         app, small_state, registry=registry or function_blocks.REGISTRY)
 
-    records: List[VerificationRecord] = []
-    fb_fixed: Dict[str, str] = {}       # residual rule state
-    fb_pinned = False
-    early = False
-    # one penalty scale for every verification in this run (GA-internal
-    # evaluations get it via run_ga; direct measurements get it stamped)
-    penalty_s = ga_cfg.penalty_s if ga_cfg is not None else None
+    ctx = SearchContext(
+        runner=runner, inputs=inputs, ref_out=ref_out,
+        small_state=small_state, ga_cfg=ga_cfg,
+        # one penalty scale for every verification in this run (GA-internal
+        # evaluations get it via run_ga; direct measurements get it stamped)
+        penalty_s=ga_cfg.penalty_s if ga_cfg is not None else None,
+        seed=seed, fb_matches=matches)
 
-    for order, (dest, method) in enumerate(VERIFICATION_ORDER, start=1):
+    records: List[VerificationRecord] = []
+    fb_pinned = False                   # residual rule state
+    early = False
+
+    for order, (backend, method) in enumerate(backends.verification_order(),
+                                              start=1):
         # residual rule: before the FIRST loop verification, pin the best
-        # FB pattern found by verifications 1-3 — regardless of how the
-        # FB verifications exited (a no-match FPGA FB verification must not
-        # skip the pinning of a many-core / GPU FB win).
+        # FB pattern found by the FB verifications — regardless of how they
+        # exited (a no-match FPGA FB verification must not skip the pinning
+        # of a many-core / GPU FB win).
         if method == "loop" and not fb_pinned:
             fb_pinned = True
-            fb_fixed = _pin_best_fb(records, ref_time)
+            ctx.fixed_choice = _pin_best_fb(records, ref_time)
 
-        t0 = time.perf_counter()
-        if method == "function_block":
-            choice = function_blocks.apply_matches(app, matches, dest.key)
-            if choice is None:
-                records.append(VerificationRecord(
-                    order=order, destination=dest.name,
-                    paper_analogue=dest.paper_analogue, method=method,
-                    best_time_s=float("inf"), improvement=0.0,
-                    price=dest.price, n_measurements=0,
-                    verify_elapsed_s=time.perf_counter() - t0,
-                    met_target=False, note="no offloadable function block"))
-                continue
-            ev = runner.measure(app.build(choice), inputs, ref_out)
-            if penalty_s is not None:
-                ev.penalty_s = penalty_s
-            rec = VerificationRecord(
-                order=order, destination=dest.name,
-                paper_analogue=dest.paper_analogue, method=method,
-                best_time_s=ev.effective_time,
-                improvement=ref_time / max(ev.effective_time, 1e-12),
-                price=dest.price, n_measurements=1,
-                verify_elapsed_s=time.perf_counter() - t0,
-                met_target=ev.correct and targets.met(
-                    ev.effective_time, ref_time, dest.price),
-                correct=ev.correct,
-                choice=dict(choice),
-                note="; ".join(f"{m.entry.name}@{m.nest.name}({m.method}"
-                               f":{m.score:.2f})" for m in matches))
-            records.append(rec)
-        else:
-            if dest.key == "pallas":
-                res = loop_offload.fpga_search(
-                    app, dest, runner, inputs, ref_out, small_state,
-                    fixed_choice=fb_fixed, penalty_s=penalty_s)
-            else:
-                res = loop_offload.ga_search(
-                    app, dest, runner, inputs, ref_out,
-                    fixed_choice=fb_fixed, ga_cfg=ga_cfg, seed=seed)
-            rec = VerificationRecord(
-                order=order, destination=dest.name,
-                paper_analogue=dest.paper_analogue, method=method,
-                best_time_s=res.best_time_s,
-                improvement=ref_time / max(res.best_time_s, 1e-12),
-                price=dest.price, n_measurements=res.n_measurements,
-                verify_elapsed_s=res.verify_elapsed_s,
-                met_target=res.best_correct and targets.met(
-                    res.best_time_s, ref_time, dest.price),
-                correct=res.best_correct,
-                choice=dict(res.best_choice), note=res.note)
-            records.append(rec)
+        res = backend.search(app, ctx, method=method)
+        rec = VerificationRecord(
+            order=order, destination=backend.name,
+            paper_analogue=backend.paper_analogue, method=method,
+            best_time_s=res.best_time_s,
+            improvement=ref_time / max(res.best_time_s, 1e-12)
+            if res.best_time_s < float("inf") else 0.0,
+            price=backend.price, n_measurements=res.n_measurements,
+            verify_elapsed_s=res.verify_elapsed_s,
+            met_target=res.best_correct and targets.met(
+                res.best_time_s, ref_time, backend.price),
+            correct=res.best_correct,
+            choice=dict(res.best_choice), note=res.note)
+        records.append(rec)
 
-        # mesh bridge: compile the dp / tp winner for an actual mesh and
-        # record the modeled (roofline) step time next to the host timing
+        # mesh bridge: compile the winner for an actual mesh through the
+        # backend's hook and record the modeled (roofline) step time next to
+        # the host timing
         if (cost_runner is not None and rec.correct
                 and rec.best_time_s < float("inf")):
-            from repro.dist import bridge
-            mesh_ev = bridge.mesh_verify(cost_runner, dest,
-                                         app.build(dict(rec.choice)), inputs)
+            mesh_ev = backend.mesh_verify(cost_runner,
+                                          app.build(dict(rec.choice)), inputs)
             if mesh_ev is not None and mesh_ev.correct:
                 rec.mesh_time_s = mesh_ev.time_s
                 rec.mesh_info = dict(mesh_ev.info)
@@ -219,10 +217,10 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
             early = True
             break
 
-    # selection: correct patterns only; a penalized wrong result is never
-    # the chosen destination (it stays in records as evidence)
-    done = [r for r in records
-            if r.correct and r.best_time_s < float("inf")]
-    selected = min(done, key=lambda r: r.best_time_s) if done else None
+    # selection: delegated to the policy; every policy ranks correct
+    # patterns only — a penalized wrong result is never the chosen
+    # destination (it stays in records as evidence)
+    selected = pol.select(records)
     return PlanReport(app=app.name, ref_time_s=ref_time, records=records,
-                      selected=selected, early_stopped=early)
+                      selected=selected, early_stopped=early,
+                      policy=pol.name)

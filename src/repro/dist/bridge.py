@@ -7,8 +7,11 @@ module compiles the candidate for an actual mesh and scores the produced
 artifact with :meth:`CompiledCostRunner.measure`, so destination selection
 can see collective/communication cost instead of only single-host timing.
 
-A destination advertises its mesh analogue via ``Destination.mesh_role``
-("data" | "model" | ""); the bridge derives input shardings from it:
+This module is the default ``mesh_verify`` hook of the built-in backends
+(:mod:`repro.backends.builtin`); a custom backend can swap it for its own
+``mesh_verify_fn``.  A backend advertises its mesh analogue via
+``Backend.mesh_role`` ("data" | "model" | ""); the bridge derives input
+shardings from it:
 
   * data role — leading dimension of every input over the batch axes;
   * model role — trailing dimension over the "model" axis.

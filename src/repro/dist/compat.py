@@ -96,17 +96,22 @@ def cost_analysis_dict(compiled) -> dict:
 def set_mesh(mesh):
     """``with set_mesh(m):`` — activates ``m`` as the ambient mesh."""
     if hasattr(jax, "set_mesh"):
+        # capture the enclosing mesh BEFORE the call mutates the ambient
+        # state (jax.set_mesh sets immediately even when it also returns a
+        # context manager)
+        prev = getattr(jax.sharding, "get_abstract_mesh", lambda: None)()
         ctx = jax.set_mesh(mesh)
         if hasattr(ctx, "__enter__"):
             with ctx:
                 yield mesh
         else:                               # set_mesh is a plain setter
-            prev = getattr(jax.sharding, "get_abstract_mesh",
-                           lambda: None)()
             try:
                 yield mesh
             finally:
-                jax.set_mesh(prev)          # restore the enclosing mesh
+                # restore the enclosing mesh (prev=None resets to no-mesh;
+                # a loud failure here beats silently leaking `mesh` into
+                # every subsequent trace)
+                jax.set_mesh(prev)
         return
     with mesh:
         yield mesh

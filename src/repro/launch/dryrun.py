@@ -107,7 +107,7 @@ def build_step(cfg, shape, mesh, plan):
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              plan_name: str = "auto", out_dir: Path = OUT_DIR,
-             overrides: dict = None) -> dict:
+             overrides: dict = None, policy: str = "host-time") -> dict:
     import jax
     from repro.configs import get_config, get_shape, cell_runnable
     from repro.core import cost_model
@@ -116,7 +116,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
-                    "plan": plan_name}
+                    "plan": plan_name, "policy": policy}
     if not cell_runnable(cfg, shape):
         result["skip"] = ("long_500k needs sub-quadratic attention; "
                           f"{arch} is pure full-attention (see DESIGN.md)")
@@ -176,6 +176,14 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                        + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
         < 16 * 1024**3,
     })
+    # selection-policy score (repro.backends.policy): the ranking key the
+    # cost policy assigns this cell — price is the chip count, so
+    # price-weighted / power rank step_time x slice size (throughput per
+    # relative dollar) while host-time / modeled rank pure step time.
+    from repro.backends import get_policy
+    pol = get_policy(policy)
+    result["policy_score"] = pol.score_parts(
+        rl.step_time_s, price=float(n_chips), modeled_s=rl.step_time_s)
     return result
 
 
@@ -195,6 +203,13 @@ def main():
     ap.add_argument("--plan", default="auto")
     ap.add_argument("--plan-json", default=None,
                     help='JSON dict of Plan field overrides')
+    ap.add_argument("--policy", default="host-time",
+                    help="selection policy ranking the compiled cells "
+                         "(repro.backends.policy): host-time | modeled "
+                         "rank pure modeled step time; price-weighted | "
+                         "power rank step_time x chip count (throughput "
+                         "per relative dollar). With --all, the best mesh "
+                         "per (arch, shape) under the policy is printed.")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--timeout", type=int, default=3000)
@@ -218,7 +233,8 @@ def main():
                 continue
             cmd = [sys.executable, "-m", "repro.launch.dryrun",
                    "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
-                   "--plan", args.plan, "--out", str(out_dir)]
+                   "--plan", args.plan, "--policy", args.policy,
+                   "--out", str(out_dir)]
             print(f"[dryrun] {arch} × {shape} × {mesh_kind} ...",
                   flush=True)
             try:
@@ -247,6 +263,32 @@ def main():
                      "error": f"timeout after {args.timeout}s"}, indent=1))
                 fail += 1
                 print("  TIMEOUT", flush=True)
+        # policy selection across meshes: for each (arch, shape) with more
+        # than one compiled mesh cell, report the one the cost policy picks
+        from repro.backends import get_policy
+        pol = get_policy(args.policy)
+        by_cell: dict = {}
+        for arch, shape, mesh_kind in todo:
+            path = cell_path(out_dir, arch, shape, mesh_kind, args.plan)
+            if not path.exists():
+                continue
+            r = json.loads(path.read_text())
+            if "error" in r or "skip" in r or "roofline" not in r:
+                continue
+            score = r.get("policy_score")
+            if score is None or r.get("policy") != pol.name:
+                score = pol.score_parts(r["roofline"]["step_time_s"],
+                                        price=float(r["n_chips"]),
+                                        modeled_s=r["roofline"]["step_time_s"])
+            by_cell.setdefault((arch, shape), []).append((score, mesh_kind, r))
+        for (arch, shape), cells in sorted(by_cell.items()):
+            if len(cells) < 2:
+                continue
+            score, mesh_kind, r = min(cells, key=lambda c: c[0])
+            print(f"[policy={pol.name}] {arch} x {shape}: {mesh_kind} "
+                  f"({r['n_chips']} chips, "
+                  f"step={r['roofline']['step_time_s']:.4f}s, "
+                  f"score={score:.4f})")
         print(f"[dryrun] done: {ok} ok, {skip} skip, {fail} fail")
         sys.exit(1 if fail else 0)
 
@@ -256,7 +298,7 @@ def main():
     try:
         overrides = json.loads(args.plan_json) if args.plan_json else None
         res = run_cell(args.arch, args.shape, args.mesh, args.plan, out_dir,
-                       overrides)
+                       overrides, policy=args.policy)
     except Exception:
         res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "error": traceback.format_exc()[-6000:]}

@@ -1,0 +1,278 @@
+"""Pluggable offload-backend API (repro.backends): registry-derived
+verification order, selection policies, custom backend registration, and the
+legacy repro.core.destinations shim."""
+import jax.numpy as jnp
+import pytest
+
+from repro.backends import (Backend, BackendRegistry, DEFAULT_REGISTRY,
+                            SelectionPolicy, get_policy, register_policy)
+from repro.backends.builtin import ga_loop_search
+from repro.core.function_blocks import Registry
+from repro.core.ga import Evaluation, GAConfig
+from repro.core.offloadable import LoopNest, OffloadableApp
+from repro.core.planner import UserTarget, plan_offload
+
+
+class ScriptedRunner:
+    """Deterministic verification environment: the app encodes its own
+    "processing time" in the output scalar."""
+
+    def measure(self, fn, inputs, reference_out):
+        out = fn(inputs)
+        return Evaluation(time_s=float(out), correct=True,
+                          info={"output": out})
+
+
+def _stage(value):
+    def impl(state):
+        s = dict(state)
+        s["out"] = jnp.float32(value)
+        return s
+    return impl
+
+
+def _scripted_app(times):
+    """One nest whose impl 'times' dict maps impl key -> scripted time."""
+    nest = LoopNest(name="stage",
+                    impls={k: _stage(v) for k, v in times.items()})
+    return OffloadableApp(
+        name="scripted",
+        nests=[nest],
+        make_inputs=lambda seed=0, small=False: {"x": jnp.ones((4,))})
+
+
+class FakeCostRunner:
+    """Scripted mesh verification: modeled time per backend key."""
+
+    def __init__(self, mesh_times):
+        self.mesh_times = mesh_times
+
+
+def _fake_mesh_verify(backend, cost_runner, fn, inputs):
+    t = cost_runner.mesh_times.get(backend.key)
+    if t is None:
+        return None
+    return Evaluation(time_s=t, correct=True, info={"scripted": True})
+
+
+def _dp_tp_registry():
+    dp = Backend(key="dp", name="xla_dp", paper_analogue="many-core CPU",
+                 price=1.2, verify_time=1.0, mesh_role="data",
+                 search_fn=ga_loop_search,
+                 mesh_verify_fn=_fake_mesh_verify)
+    tp = Backend(key="tp", name="sharded_tp", paper_analogue="GPU",
+                 price=1.0, verify_time=1.5, mesh_role="model",
+                 search_fn=ga_loop_search,
+                 mesh_verify_fn=_fake_mesh_verify)
+    return BackendRegistry([dp, tp])
+
+
+# ------------------------------------------------------------------ order
+def test_registry_derives_papers_six_verification_order():
+    order = DEFAULT_REGISTRY.verification_order()
+    assert [(b.paper_analogue, m) for b, m in order] == [
+        ("many-core CPU", "function_block"),
+        ("GPU", "function_block"),
+        ("FPGA", "function_block"),
+        ("many-core CPU", "loop"),
+        ("GPU", "loop"),
+        ("FPGA", "loop"),
+    ]
+
+
+def test_order_respects_verify_time_not_registration_order():
+    a = Backend(key="a", name="a", paper_analogue="A", price=1.0,
+                verify_time=5.0, search_fn=ga_loop_search)
+    b = Backend(key="b", name="b", paper_analogue="B", price=1.0,
+                verify_time=1.0, search_fn=ga_loop_search)
+    reg = BackendRegistry([a, b])        # registered slow-to-verify first
+    order = reg.verification_order()
+    assert [x.key for x, m in order if m == "loop"] == ["b", "a"]
+    assert [x.key for x, m in order if m == "function_block"] == ["b", "a"]
+    # FB phase strictly before loop phase
+    methods = [m for _, m in order]
+    assert methods == ["function_block"] * 2 + ["loop"] * 2
+
+
+def test_register_duplicate_key_requires_replace():
+    reg = _dp_tp_registry()
+    clone = reg.get("dp").with_(price=9.0)
+    with pytest.raises(ValueError):
+        reg.register(clone)
+    reg.register(clone, replace=True)
+    assert reg.get("dp").price == 9.0
+    assert len(reg) == 2
+
+
+# ----------------------------------------------------------------- shims
+def test_legacy_destinations_shim_importable():
+    from repro.core.destinations import (ALL, BY_ANALOGUE, BY_NAME,
+                                         Destination, FPGA, GPU, MANY_CORE,
+                                         VERIFICATION_ORDER)
+    assert len(VERIFICATION_ORDER) == 6
+    assert Destination is Backend
+    assert [d.key for d in ALL] == ["dp", "tp", "pallas"]
+    assert BY_NAME["pallas_kernel"] is FPGA
+    assert BY_ANALOGUE["GPU"] is GPU
+    assert MANY_CORE.mesh_role == "data"
+    # the shim order IS the derived order
+    derived = DEFAULT_REGISTRY.verification_order()
+    assert [(d.key, m) for d, m in VERIFICATION_ORDER] == \
+        [(b.key, m) for b, m in derived]
+
+
+def test_legacy_loop_search_result_alias():
+    from repro.backends.base import SearchResult
+    from repro.core.loop_offload import LoopSearchResult
+    assert LoopSearchResult is SearchResult
+
+
+# --------------------------------------------------------------- policies
+def test_policy_lookup_and_unknown_policy():
+    assert get_policy("host-time").name == "host-time"
+    assert get_policy(None).name == "host-time"
+    pol = get_policy("modeled")
+    assert get_policy(pol) is pol
+    with pytest.raises(ValueError, match="unknown selection policy"):
+        get_policy("does-not-exist")
+
+
+def test_policy_scores():
+    host, modeled = get_policy("host-time"), get_policy("modeled")
+    price, power = get_policy("price-weighted"), get_policy("power")
+    assert host.score_parts(2.0, price=3.0, modeled_s=0.5) == 2.0
+    assert modeled.score_parts(2.0, price=3.0, modeled_s=0.5) == 0.5
+    assert modeled.score_parts(2.0, price=3.0, modeled_s=None) == 2.0
+    assert price.score_parts(2.0, price=3.0, modeled_s=0.5) == 6.0
+    assert power.score_parts(2.0, price=3.0, modeled_s=0.5) == 1.5
+    assert power.score_parts(2.0, price=3.0, modeled_s=None) == 6.0
+
+
+def test_modeled_policy_flips_selection_on_comm_bound_candidate():
+    """Acceptance: with a cost_runner recording mesh times, policy="modeled"
+    selects by mesh_time_s — the host-fastest tp candidate is comm-bound on
+    the mesh, so modeled selection flips to dp; host-time keeps tp."""
+    app = _scripted_app({"seq": 1.0, "dp": 0.8, "tp": 0.5})
+    # tp is fastest on the host but comm-bound once compiled for the mesh
+    cost_runner = FakeCostRunner({"dp": 0.1, "tp": 2.0})
+    common = dict(runner=ScriptedRunner(),
+                  ga_cfg=GAConfig(population=2, generations=2),
+                  registry=Registry(),           # no function blocks
+                  backends=_dp_tp_registry(), cost_runner=cost_runner)
+
+    host = plan_offload(app, UserTarget(), policy="host-time", **common)
+    assert host.policy == "host-time"
+    assert host.selected.destination == "sharded_tp"
+    assert host.selected.best_time_s == pytest.approx(0.5)
+
+    modeled = plan_offload(app, UserTarget(), policy="modeled", **common)
+    assert modeled.policy == "modeled"
+    assert modeled.selected.destination == "xla_dp"
+    assert modeled.selected.mesh_time_s == pytest.approx(0.1)
+    # the comm-bound evidence is on the record the policy rejected
+    tp_rec = next(r for r in modeled.records
+                  if r.destination == "sharded_tp" and r.method == "loop")
+    assert tp_rec.mesh_time_s == pytest.approx(2.0)
+
+
+def test_default_policy_reproduces_host_time_selection():
+    app = _scripted_app({"seq": 1.0, "dp": 0.8, "tp": 0.5})
+    report = plan_offload(app, UserTarget(), runner=ScriptedRunner(),
+                          ga_cfg=GAConfig(population=2, generations=2),
+                          registry=Registry(), backends=_dp_tp_registry())
+    assert report.policy == "host-time"
+    assert report.selected.destination == "sharded_tp"
+
+
+def test_price_weighted_policy_uses_declared_price():
+    # dp: 0.8 x price 1.2 = 0.96; tp: 0.9 x price 1.0 = 0.90 -> tp wins
+    # even though host-time alone is nearly tied
+    app = _scripted_app({"seq": 1.0, "dp": 0.8, "tp": 0.9})
+    report = plan_offload(app, UserTarget(), runner=ScriptedRunner(),
+                          ga_cfg=GAConfig(population=2, generations=2),
+                          registry=Registry(), backends=_dp_tp_registry(),
+                          policy="price-weighted")
+    assert report.selected.destination == "sharded_tp"
+    host = plan_offload(app, UserTarget(), runner=ScriptedRunner(),
+                        ga_cfg=GAConfig(population=2, generations=2),
+                        registry=Registry(), backends=_dp_tp_registry())
+    assert host.selected.destination == "xla_dp"
+
+
+def test_custom_policy_registrable():
+    class WorstCase(SelectionPolicy):
+        name = "test-worst-case"
+
+        def score_parts(self, time_s, price=1.0, modeled_s=None):
+            return -time_s          # deliberately picks the slowest
+
+    register_policy(WorstCase())
+    try:
+        app = _scripted_app({"seq": 1.0, "dp": 0.8, "tp": 0.5})
+        report = plan_offload(app, UserTarget(), runner=ScriptedRunner(),
+                              ga_cfg=GAConfig(population=2, generations=2),
+                              registry=Registry(),
+                              backends=_dp_tp_registry(),
+                              policy="test-worst-case")
+        # slowest correct+finite record wins under the custom objective
+        assert report.selected.best_time_s == max(
+            r.best_time_s for r in report.records
+            if r.best_time_s < float("inf"))
+    finally:
+        from repro.backends.policy import POLICIES
+        POLICIES.pop("test-worst-case", None)
+
+
+# ------------------------------------------------------- custom backends
+def test_custom_backend_registered_without_planner_surgery():
+    """Acceptance: a new destination slots into the verification order and
+    shows up in PlanReport without editing planner.py."""
+
+    def scripted_search(backend, app, ctx):
+        from repro.backends.base import SearchResult
+        choice = {n.name: backend.key for n in app.nests
+                  if backend.key in n.impls}
+        ev = ctx.measure(app, choice)
+        return SearchResult(destination=backend.name,
+                            best_choice=choice,
+                            best_time_s=ev.effective_time,
+                            n_measurements=1, verify_elapsed_s=0.0,
+                            best_correct=ev.correct)
+
+    npu = Backend(key="npu", name="npu_offload", paper_analogue="NPU",
+                  price=0.5, verify_time=0.1,      # cheapest to verify
+                  search_fn=scripted_search)
+    reg = _dp_tp_registry()
+    reg.register(npu)
+
+    app = _scripted_app({"seq": 1.0, "dp": 0.8, "tp": 0.5, "npu": 0.2})
+    report = plan_offload(app, UserTarget(), runner=ScriptedRunner(),
+                          ga_cfg=GAConfig(population=2, generations=2),
+                          registry=Registry(), backends=reg)
+    # 3 backends x 2 methods
+    assert len(report.records) == 6
+    # verify_time=0.1 puts the NPU first in both phases
+    assert report.records[0].destination == "npu_offload"
+    assert report.records[3].destination == "npu_offload"
+    assert report.records[3].method == "loop"
+    # and it wins selection under the default policy
+    assert report.selected.destination == "npu_offload"
+    assert report.selected.best_time_s == pytest.approx(0.2)
+    assert {r.paper_analogue for r in report.records} == \
+        {"NPU", "many-core CPU", "GPU"}
+
+
+def test_summary_rows_include_mesh_time_and_correct():
+    app = _scripted_app({"seq": 1.0, "dp": 0.8, "tp": 0.5})
+    report = plan_offload(app, UserTarget(), runner=ScriptedRunner(),
+                          ga_cfg=GAConfig(population=2, generations=2),
+                          registry=Registry(), backends=_dp_tp_registry(),
+                          cost_runner=FakeCostRunner({"dp": 0.1, "tp": 2.0}))
+    rows = report.summary_rows()
+    assert all("mesh_time_s" in row and "correct" in row for row in rows)
+    by_dest = {(row["destination"], row["method"]): row for row in rows}
+    assert by_dest[("many-core CPU", "loop")]["mesh_time_s"] == \
+        pytest.approx(0.1)
+    assert by_dest[("GPU", "loop")]["mesh_time_s"] == pytest.approx(2.0)
+    assert all(row["correct"] for row in rows
+               if row["time_s"] < float("inf"))

@@ -11,18 +11,32 @@ from repro.core.planner import UserTarget, plan_offload
 
 def test_end_to_end_mixed_destination_selection():
     """The headline behaviour (paper Fig.3): each app gets a destination and
-    the selected pattern is correct + at least as fast as single-core."""
-    runner = TimedRunner(repeats=3)   # min-of-3: sub-ms timings are noisy
-                                      # under full-suite load
+    the selected pattern is correct + modeled no slower than single-core.
+
+    The performance margin is asserted on the CompiledCostRunner's roofline
+    of the compiled artifacts, not wall clock — min-of-k timings of sub-ms
+    apps stayed flaky on loaded CI hosts, while the modeled comparison is
+    deterministic.
+    """
+    from repro.core.measure import CompiledCostRunner
+    cost = CompiledCostRunner()
     for name in APPS:
         app = APPS[name]()
+        inputs = app.make_inputs(0, small=True)
         report = plan_offload(
-            app, UserTarget(), inputs=app.make_inputs(0, small=True),
-            runner=runner, ga_cfg=GAConfig(population=3, generations=3,
-                                           seed=0))
+            app, UserTarget(), inputs=inputs,
+            runner=TimedRunner(repeats=1),
+            ga_cfg=GAConfig(population=3, generations=3, seed=0))
         assert report.selected is not None, name
-        assert report.selected.best_time_s <= report.ref_time_s * 1.5, name
+        assert report.selected.correct, name
         assert len(report.records) == 6, name
+        sds = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), inputs)
+        ref_ev = cost.measure(app.reference_fn(), sds)
+        sel_ev = cost.measure(app.build(dict(report.selected.choice)), sds)
+        assert ref_ev.correct and sel_ev.correct, name
+        assert sel_ev.time_s <= ref_ev.time_s * 1.5, \
+            (name, sel_ev.time_s, ref_ev.time_s)
 
 
 def test_training_loss_decreases_end_to_end(tmp_path):
