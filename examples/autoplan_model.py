@@ -40,6 +40,7 @@ def main():
     from repro.backends import get_policy
     from repro.configs import get_config
     from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.core import cost_model
     from repro.core.ga import Evaluation, GAConfig, run_ga
     from repro.core.measure import CompiledCostRunner
     from repro.dist.plan import Plan
@@ -50,7 +51,15 @@ def main():
 
     cfg = get_config(args.arch).reduced()
     shape = ShapeConfig("plan-search", 64, 16, "train")
-    mesh = make_test_mesh((4, 2))
+    # a pod axis so the pipeline-schedule genes have a destination.  The
+    # schedule genes are scored by *model*: the compiled artifact stays the
+    # dp/tp step (the verification machine cannot execute a pod-scale
+    # pipeline — CompiledCostRunner's charter), and each candidate's step
+    # time is stretched by the bubble its declared schedule would impose on
+    # the pod ranks, so schedule/virtual_stages/microbatches trade off
+    # inside one consistent modeled objective
+    mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+    pipe_ranks = mesh.shape["pod"]
     tcfg = TrainConfig()
     runner = CompiledCostRunner(mesh)
     pol = get_policy(args.policy)
@@ -81,8 +90,10 @@ def main():
         instead of the serial lower/compile/score per candidate."""
         lowered = []
         for genes in generation:
+            bubble = cost_model.plan_bubble_fraction(
+                Plan.from_genes(list(genes)), pipe_ranks)
             try:
-                lowered.append(lower_candidate(genes))
+                lowered.append((lower_candidate(genes), bubble))
             except Exception as e:
                 lowered.append(Evaluation(time_s=float("inf"), correct=False,
                                           info={"error": repr(e)[:200]}))
@@ -90,11 +101,13 @@ def main():
         def compile_one(item):
             if isinstance(item, Evaluation):     # lowering already failed
                 return item
+            low, bubble = item
             try:
                 t0 = time.perf_counter()
-                compiled = item.compile()
+                compiled = low.compile()
                 return runner.score_compiled(compiled,
-                                             time.perf_counter() - t0)
+                                             time.perf_counter() - t0,
+                                             bubble_fraction=bubble)
             except Exception as e:
                 return Evaluation(time_s=float("inf"), correct=False,
                                   info={"error": repr(e)[:200]})

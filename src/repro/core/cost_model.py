@@ -90,8 +90,10 @@ class Roofline:
     dominant: str
     model_flops: float = 0.0          # 6*N*D (active params for MoE)
     useful_flops_ratio: float = 0.0   # MODEL_FLOPS / (HLO_FLOPs * chips)
-    step_time_s: float = 0.0          # max of the three terms
+    step_time_s: float = 0.0          # max of the three terms / (1 - bubble)
     roofline_fraction: float = 0.0    # useful compute time / step time
+    bubble_fraction: float = 0.0      # pipeline-schedule idle fraction
+    pipeline_s: float = 0.0           # extra step time the bubble costs
 
     def to_dict(self):
         return asdict(self)
@@ -99,14 +101,19 @@ class Roofline:
 
 def roofline_terms(flops: float, bytes_accessed: float,
                    collective_bytes: float, *, n_chips: int,
-                   model_flops: float = 0.0) -> Roofline:
+                   model_flops: float = 0.0,
+                   bubble_fraction: float = 0.0) -> Roofline:
     compute_s = flops / PEAK_FLOPS
     memory_s = bytes_accessed / HBM_BW
     collective_s = collective_bytes / ICI_BW
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": collective_s}
     dominant = max(terms, key=terms.get)
-    step = max(compute_s, memory_s, collective_s)
+    busy = max(compute_s, memory_s, collective_s)
+    # a pipeline schedule idles each rank for bubble_fraction of the step:
+    # the busy roofline time is only (1 - bubble) of the wall clock
+    bubble = min(max(bubble_fraction, 0.0), 0.999)
+    step = busy / (1.0 - bubble)
     useful = model_flops / (flops * n_chips) if flops else 0.0
     useful_time = (model_flops / n_chips) / PEAK_FLOPS
     return Roofline(
@@ -119,7 +126,81 @@ def roofline_terms(flops: float, bytes_accessed: float,
         useful_flops_ratio=useful,
         step_time_s=step,
         roofline_fraction=(useful_time / step) if step else 0.0,
+        bubble_fraction=bubble,
+        pipeline_s=step - busy,
     )
+
+
+# --------------------------------------------------------------------------
+# Pipeline-schedule terms (closed forms; repro.dist.schedules builds the
+# matching tick plans and tests pin the two together).
+# --------------------------------------------------------------------------
+
+KNOWN_SCHEDULES = ("gpipe", "one_f_one_b", "interleaved")
+
+
+def _schedule_virtual(schedule: str, virtual_stages: int) -> int:
+    """gpipe / one_f_one_b run one chunk per rank whatever the plan says."""
+    return virtual_stages if schedule == "interleaved" else 1
+
+
+def pipeline_bubble_fraction(schedule: str, n_ranks: int, microbatches: int,
+                             virtual_stages: int = 1) -> float:
+    """Idle-tick fraction of the schedule's static plan.
+
+    With stride = max(m, R) and V recirculation passes the plan runs
+    (V-1)*stride + m + R - 1 ticks of which V*m do work per rank —
+    gpipe/1F1B (V=1): bubble (R-1)/(m+R-1); interleaved with m >= R:
+    (R-1)/(V*m + R - 1).  A name outside these closed forms is asked for
+    its own tick plan (custom ``register_schedule`` entries know their
+    bubble); a name nothing knows models as bubble 0 — the sequential
+    fallback ``pipeline_apply`` would actually run — never as gpipe.
+    """
+    if n_ranks <= 1:
+        return 0.0
+    m = max(microbatches, 1)
+    if schedule not in KNOWN_SCHEDULES:
+        try:
+            from repro.dist.schedules import get_schedule
+            sched = get_schedule(schedule)
+        except Exception:
+            sched = None
+        if sched is None:
+            return 0.0
+        v = max(virtual_stages, 1)
+        built = sched.build(n_stages=n_ranks * v, n_ranks=n_ranks,
+                            microbatches=m, virtual_stages=v)
+        return built.bubble_fraction if built is not None else 0.0
+    v = max(_schedule_virtual(schedule, virtual_stages), 1)
+    total = (v - 1) * max(m, n_ranks) + m + n_ranks - 1
+    return (total - v * m) / total
+
+
+def pipeline_in_flight(schedule: str, n_ranks: int, microbatches: int,
+                       virtual_stages: int = 1) -> int:
+    """Per-rank live microbatch activations the schedule's backward keeps.
+
+    gpipe holds all m; 1F1B caps at min(R, m); interleaved adds V-1 chunk
+    activations awaiting recirculation on top of the 1F1B cap.
+    """
+    m = max(microbatches, 1)
+    if n_ranks <= 1:
+        return m
+    if schedule == "one_f_one_b":
+        return min(n_ranks, m)
+    if schedule == "interleaved":
+        v = max(virtual_stages, 1)
+        return min(m * v, min(n_ranks, m) + v - 1)
+    return m
+
+
+def plan_bubble_fraction(plan, n_ranks: int) -> float:
+    """Bubble fraction a Plan's pipeline genes imply on an n_ranks pipeline
+    axis (0.0 when there is no such axis)."""
+    return pipeline_bubble_fraction(
+        getattr(plan, "pipeline_schedule", "gpipe"), n_ranks,
+        max(getattr(plan, "microbatches", 1), 1),
+        getattr(plan, "virtual_stages", 1))
 
 
 def model_flops_for(cfg, shape) -> float:

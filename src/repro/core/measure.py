@@ -34,10 +34,18 @@ def outputs_close(a, b, rtol=1e-2, atol=1e-2) -> bool:
         if len(la) != len(lb):
             return False
         for x, y in zip(la, lb):
-            x = np.asarray(x, dtype=np.float64)
-            y = np.asarray(y, dtype=np.float64)
+            x = np.asarray(x)
+            y = np.asarray(y)
             if x.shape != y.shape:
                 return False
+            if x.dtype.kind in "biu" and y.dtype.kind in "biu":
+                # integer/bool results compare exactly — a float64 round
+                # trip is silently lossy above 2**53
+                if not np.array_equal(x, y):
+                    return False
+                continue
+            x = x.astype(np.float64)
+            y = y.astype(np.float64)
             if not np.allclose(x, y, rtol=rtol, atol=atol, equal_nan=False):
                 return False
             if not np.isfinite(x).all():
@@ -72,9 +80,18 @@ class TimedRunner:
                                   timed_out=True)
             times = []
             for _ in range(self.repeats):
+                # every call gets the budget, not only the first: a
+                # candidate whose steady-state repeats hang must die
+                # through the paper's penalty path instead of running
+                # unbounded (per-call, so a legitimately slow-but-correct
+                # candidate under timeout_s per run is still measured)
                 t0 = time.perf_counter()
                 out = jax.block_until_ready(jfn(inputs))
-                times.append(time.perf_counter() - t0)
+                dt = time.perf_counter() - t0
+                if dt > self.timeout_s:
+                    return Evaluation(time_s=dt, correct=False,
+                                      timed_out=True)
+                times.append(dt)
             if reference_out is None:
                 # reference run: keep the output for reuse; candidate runs
                 # drop it (the GA cache would otherwise pin one output-sized
@@ -97,19 +114,24 @@ class CompiledCostRunner:
         self.n_chips = n_chips or (mesh.size if mesh is not None else 1)
         self.model_flops = model_flops
 
-    def score_compiled(self, compiled, verify_s: float = 0.0) -> Evaluation:
+    def score_compiled(self, compiled, verify_s: float = 0.0, *,
+                       bubble_fraction: float = 0.0) -> Evaluation:
         """Roofline-score an already-compiled executable.
 
         Split from :meth:`measure_lowered` so callers that batch the XLA
         lowering/compilation across a GA population (examples/
         autoplan_model.py) can score the artifacts afterwards.
+        ``bubble_fraction`` folds a pipeline schedule's idle fraction into
+        the modeled step time (``cost_model.plan_bubble_fraction``), so the
+        ``modeled`` policy ranks schedule genes correctly.
         """
         try:
             analyzed = analyze_hlo(compiled.as_text())
             rl = cost_model.roofline_terms(
                 analyzed["flops"], analyzed["bytes"],
                 analyzed["collective_bytes"], n_chips=self.n_chips,
-                model_flops=self.model_flops)
+                model_flops=self.model_flops,
+                bubble_fraction=bubble_fraction)
             return Evaluation(time_s=rl.step_time_s, correct=True,
                               info={"roofline": rl.to_dict(),
                                     "verify_s": verify_s})
@@ -117,7 +139,8 @@ class CompiledCostRunner:
             return Evaluation(time_s=float("inf"), correct=False,
                               info={"error": repr(e)[:500]})
 
-    def measure_lowered(self, jitted, *args_sds) -> Evaluation:
+    def measure_lowered(self, jitted, *args_sds,
+                        bubble_fraction: float = 0.0) -> Evaluation:
         try:
             t0 = time.perf_counter()
             compiled = jitted.lower(*args_sds).compile()
@@ -125,10 +148,12 @@ class CompiledCostRunner:
         except Exception as e:
             return Evaluation(time_s=float("inf"), correct=False,
                               info={"error": repr(e)[:500]})
-        return self.score_compiled(compiled, verify_s)
+        return self.score_compiled(compiled, verify_s,
+                                   bubble_fraction=bubble_fraction)
 
-    def measure(self, fn: Callable, inputs_sds, in_shardings=None
-                ) -> Evaluation:
+    def measure(self, fn: Callable, inputs_sds, in_shardings=None, *,
+                bubble_fraction: float = 0.0) -> Evaluation:
         jitted = (jax.jit(fn, in_shardings=in_shardings)
                   if in_shardings is not None else jax.jit(fn))
-        return self.measure_lowered(jitted, inputs_sds)
+        return self.measure_lowered(jitted, inputs_sds,
+                                    bubble_fraction=bubble_fraction)

@@ -23,6 +23,9 @@ class Plan:
     grad_compression: bool = False       # int8 + error feedback on "pod" psum
     vocab_chunk: int = 0                 # 0 = full-vocab xent
     opt_state_dtype: str = "float32"
+    # --- pipeline (repro.dist.schedules over the "pod" axis) --------------
+    pipeline_schedule: str = "gpipe"     # gpipe | one_f_one_b | interleaved
+    virtual_stages: int = 1              # chunks per rank (interleaved only)
     # --- attention --------------------------------------------------------
     gqa_grouped: bool = True
     blockwise_attn_threshold: int = 1024  # seq >= threshold -> blockwise
@@ -75,6 +78,8 @@ _GENE_SPACE: Tuple[Tuple[str, tuple], ...] = (
     ("attn_block_kv", (256, 512)),
     ("moe_impl", ("gspmd", "shardmap_ep")),
     ("decode_kv_seq_shard", (False, True)),
+    ("pipeline_schedule", ("gpipe", "one_f_one_b", "interleaved")),
+    ("virtual_stages", (1, 2)),
 )
 
 # make the class attribute readable without an instance too

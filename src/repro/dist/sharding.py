@@ -6,8 +6,9 @@ turns a logical-axes tuple into a :class:`~jax.sharding.PartitionSpec` for a
 concrete mesh, with two safety fallbacks the GA relies on (an invalid plan
 must lower, not crash):
 
-  * divisibility — a dimension that the assigned mesh axes do not divide is
-    replicated instead;
+  * divisibility — a dimension is sharded over the largest prefix of its
+    assigned mesh axes whose total size divides it (fully replicated only
+    when not even the first axis divides);
   * duplicate axes — a mesh axis already used earlier in the same spec is
     skipped (e.g. with ``Plan.decode_kv_seq_shard`` the ``kv_seq`` axis
     claims "model" and ``kv_heads`` falls back to replicated).
@@ -76,11 +77,20 @@ class Rules:
                      and a not in used)
         if not axes:
             return None
-        size = 1
-        for a in axes:
-            size *= self.mesh.shape[a]
-        if dim is not None and dim % size != 0:
-            return None                      # replicate: not divisible
+        if dim is not None:
+            # shard over the largest prefix of the remaining axes whose
+            # total size divides the dimension — "batch % (pod*data) != 0"
+            # must degrade to sharding over "pod", not all the way to
+            # replicated
+            size, take = 1, 0
+            for a in axes:
+                if dim % (size * self.mesh.shape[a]) != 0:
+                    break
+                size *= self.mesh.shape[a]
+                take += 1
+            axes = axes[:take]
+            if not axes:
+                return None                  # replicate: nothing divides
         used.update(axes)
         if as_tuple:
             return axes

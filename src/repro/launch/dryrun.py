@@ -35,12 +35,15 @@ def default_plan(cfg, shape, plan_name: str = "auto",
     """
     from repro.dist.plan import Plan
     import dataclasses as dc
-    if plan_name not in ("auto", "baseline") and not overrides:
+    if plan_name not in ("auto", "baseline"):
         from repro.dist import plan as plan_mod
         named = {p.name: p for p in vars(plan_mod).values()
                  if isinstance(p, Plan)}
         if plan_name in named:
-            return named[plan_name]
+            # overrides (--plan-json / --schedule) patch the named plan,
+            # they must not silently replace it with the auto baseline
+            base = named[plan_name]
+            return dc.replace(base, **overrides) if overrides else base
     kw = {}
     if shape.kind != "train":
         kw["remat"] = "none"
@@ -143,10 +146,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     from repro.core.hlo_analysis import analyze_hlo
     analyzed = analyze_hlo(hlo)      # loop-aware per-device costs
     mf = cost_model.model_flops_for(cfg, shape)
+    # pipeline-schedule genes stretch the step by the schedule's bubble —
+    # but only for cells that explicitly request a pipeline (--schedule /
+    # --plan-json): the baseline step is data-parallel over "pod", and the
+    # default Plan genes must not shift every cached multi-mesh roofline
+    pipe_ranks = mesh.shape["pod"] if "pod" in mesh.axis_names else 1
+    pipelined = bool(overrides and "pipeline_schedule" in overrides)
+    bubble = (cost_model.plan_bubble_fraction(plan, pipe_ranks)
+              if pipelined else 0.0)
     rl = cost_model.roofline_terms(
         analyzed["flops"], analyzed["bytes"],
         analyzed["collective_bytes"],
-        n_chips=n_chips, model_flops=mf)
+        n_chips=n_chips, model_flops=mf, bubble_fraction=bubble)
 
     result.update({
         "n_chips": n_chips,
@@ -203,6 +214,14 @@ def main():
     ap.add_argument("--plan", default="auto")
     ap.add_argument("--plan-json", default=None,
                     help='JSON dict of Plan field overrides')
+    ap.add_argument("--schedule", default=None,
+                    choices=["gpipe", "one_f_one_b", "interleaved"],
+                    help="pipeline schedule gene (repro.dist.schedules); "
+                         "overrides Plan.pipeline_schedule and folds the "
+                         "schedule's bubble fraction into the roofline on "
+                         "meshes with a pod axis")
+    ap.add_argument("--virtual-stages", type=int, default=None,
+                    help="chunks per rank for --schedule interleaved")
     ap.add_argument("--policy", default="host-time",
                     help="selection policy ranking the compiled cells "
                          "(repro.backends.policy): host-time | modeled "
@@ -217,6 +236,26 @@ def main():
     args = ap.parse_args()
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
+    # schedule flags ride the Plan-override mechanism; pipelined cells cache
+    # under their own tag so they never shadow the baseline plan's JSON —
+    # whether the pipeline genes arrive via --schedule or --plan-json
+    sched_overrides = {}
+    if args.schedule:
+        sched_overrides["pipeline_schedule"] = args.schedule
+    if args.virtual_stages:
+        if not args.schedule:
+            ap.error("--virtual-stages requires --schedule")
+        sched_overrides["virtual_stages"] = args.virtual_stages
+    try:
+        json_overrides = json.loads(args.plan_json) if args.plan_json else {}
+    except json.JSONDecodeError as e:
+        ap.error(f"--plan-json is not valid JSON: {e}")
+    all_overrides = dict(json_overrides, **sched_overrides)
+    plan_tag = args.plan
+    if "pipeline_schedule" in all_overrides:
+        plan_tag = f"{args.plan}-{all_overrides['pipeline_schedule']}"
+        if all_overrides.get("virtual_stages"):
+            plan_tag += f"-v{all_overrides['virtual_stages']}"
 
     if args.all:
         from repro.configs import ARCHS, SHAPES
@@ -224,7 +263,7 @@ def main():
         todo = [(a, s, m) for a in ARCHS for s in SHAPES for m in meshes]
         ok = fail = skip = 0
         for arch, shape, mesh_kind in todo:
-            path = cell_path(out_dir, arch, shape, mesh_kind, args.plan)
+            path = cell_path(out_dir, arch, shape, mesh_kind, plan_tag)
             if path.exists() and not args.force:
                 prev = json.loads(path.read_text())
                 ok += ("error" not in prev and "skip" not in prev)
@@ -235,6 +274,12 @@ def main():
                    "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
                    "--plan", args.plan, "--policy", args.policy,
                    "--out", str(out_dir)]
+            if args.schedule:
+                cmd += ["--schedule", args.schedule]
+            if args.virtual_stages:
+                cmd += ["--virtual-stages", str(args.virtual_stages)]
+            if args.plan_json:
+                cmd += ["--plan-json", args.plan_json]
             print(f"[dryrun] {arch} × {shape} × {mesh_kind} ...",
                   flush=True)
             try:
@@ -269,7 +314,7 @@ def main():
         pol = get_policy(args.policy)
         by_cell: dict = {}
         for arch, shape, mesh_kind in todo:
-            path = cell_path(out_dir, arch, shape, mesh_kind, args.plan)
+            path = cell_path(out_dir, arch, shape, mesh_kind, plan_tag)
             if not path.exists():
                 continue
             r = json.loads(path.read_text())
@@ -294,11 +339,10 @@ def main():
 
     # single cell (in-process)
     assert args.arch and args.shape
-    path = cell_path(out_dir, args.arch, args.shape, args.mesh, args.plan)
+    path = cell_path(out_dir, args.arch, args.shape, args.mesh, plan_tag)
     try:
-        overrides = json.loads(args.plan_json) if args.plan_json else None
         res = run_cell(args.arch, args.shape, args.mesh, args.plan, out_dir,
-                       overrides, policy=args.policy)
+                       all_overrides or None, policy=args.policy)
     except Exception:
         res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "error": traceback.format_exc()[-6000:]}

@@ -140,6 +140,43 @@ def make_pod_parallel_train_step(model: Model, tcfg: TrainConfig,
     return train_step
 
 
+def make_pipeline_train_step(stage_fn, tcfg: TrainConfig, mesh, plan,
+                             *, axis: str = "pod",
+                             loss_fn: Callable = None) -> Callable:
+    """Train step for a stage-stacked model pipelined over ``axis``.
+
+    The forward pass runs under the plan's pipeline genes
+    (``pipeline_schedule`` / ``virtual_stages`` / ``microbatches``, see
+    ``repro.dist.schedules``); the backward pass falls out of autodiff
+    through the schedule's ``ppermute`` plan.  ``stage_params`` has leading
+    dim = number of stages; ``batch`` is ``(x, y)``; ``loss_fn(pred, y)``
+    defaults to mean squared error.
+    """
+    from repro.dist.pipeline import pipeline_apply
+
+    n_micro = max(getattr(plan, "microbatches", 1), 1)
+    schedule = getattr(plan, "pipeline_schedule", "gpipe")
+    virtual = getattr(plan, "virtual_stages", 1)
+    loss_of = loss_fn or (lambda pred, y: jnp.mean((pred - y) ** 2))
+
+    def train_step(stage_params, opt_state, batch, step):
+        x, y = batch
+
+        def loss(ws):
+            out = pipeline_apply(stage_fn, ws, x, mesh,
+                                 microbatches=n_micro, axis=axis,
+                                 schedule=schedule, virtual_stages=virtual)
+            return loss_of(out, y)
+
+        lval, grads = jax.value_and_grad(loss)(stage_params)
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, stage_params, tcfg)
+        metrics = dict(opt_metrics, loss=lval, step=step)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
 # ---------------------------------------------------------------------------
 # serving
 # ---------------------------------------------------------------------------

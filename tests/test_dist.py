@@ -76,6 +76,25 @@ def test_rules_divisibility_replicates(mesh):
     assert r.spec(("embed", "ff"), dims=(64, 16)) == P(("data",), "model")
 
 
+def test_rules_shard_largest_divisible_prefix():
+    """batch % (pod*data) != 0 must degrade to sharding over the divisible
+    prefix ("pod",), not fall all the way back to replicated."""
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 4, "model": 2}
+    rules = Rules(FakeMesh(), Plan())
+    # 4 % (2*4) != 0 but 4 % 2 == 0 -> shard over ("pod",) only
+    assert rules.spec(("batch", None), dims=(4, 8)) == P(("pod",))
+    # divisible by the full tuple -> unchanged behavior
+    assert rules.spec(("batch", None), dims=(16, 8)) == P(("pod", "data"))
+    # not even the first axis divides -> replicated
+    assert rules.spec(("batch", None), dims=(3, 8)) == P()
+    # the taken prefix is marked used: a later dim cannot reuse "pod",
+    # while the untaken "data" stays free for dims that map to it
+    spec = rules.spec(("batch", "embed"), dims=(4, 8))
+    assert spec == P(("pod",), ("data",))
+
+
 def test_rules_duplicate_axis_falls_back():
     class FakeMesh:
         axis_names = ("data", "model")

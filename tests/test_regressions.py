@@ -5,10 +5,16 @@
     many-core / GPU FB patterns;
   * GAConfig.penalty_s was silently dropped (Evaluation hard-coded the
     module constant);
-  * the single-core reference was compiled and executed twice.
+  * the single-core reference was compiled and executed twice;
+  * TimedRunner only enforced timeout_s on the first call — steady-state
+    repeats ran unbounded;
+  * outputs_close cast integer results through float64 (lossy above 2**53).
 """
+import time
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core.function_blocks import FunctionBlockEntry, Registry
@@ -105,6 +111,47 @@ def test_timed_runner_returns_output_and_reference_is_correct():
     assert ev.correct                      # reference run: trivially correct
     assert "output" in ev.info
     assert float(jax.numpy.sum(ev.info["output"])) == pytest.approx(12.0)
+
+
+def test_timed_runner_timeout_covers_steady_state_repeats():
+    """A candidate whose steady-state repeats hang must hit the penalty
+    path after the first hanging repeat instead of running repeats x hang
+    unbounded (timeout_s was only checked on the first call).  The budget
+    is per call, so slow-but-correct candidates under timeout_s per run
+    keep their old ranking."""
+    calls = {"n": 0}
+
+    def slow(s):
+        def hang(x):
+            calls["n"] += 1
+            if calls["n"] > 1:                      # steady state hangs
+                time.sleep(1.5)
+            return x
+        return jax.pure_callback(
+            hang, jax.ShapeDtypeStruct(s["x"].shape, s["x"].dtype), s["x"])
+
+    runner = TimedRunner(timeout_s=1.0, repeats=10)
+    t0 = time.perf_counter()
+    ev = runner.measure(slow, {"x": jnp.arange(4.0)}, jnp.arange(4.0))
+    elapsed = time.perf_counter() - t0
+    assert ev.timed_out and not ev.correct
+    assert ev.effective_time == ev.penalty_s        # paper's 1000 s path
+    assert elapsed < 10.0, "repeats ran unbounded past timeout_s"
+
+
+def test_outputs_close_integer_leaves_compare_exactly():
+    from repro.core.measure import outputs_close
+
+    big = np.array([2 ** 53], dtype=np.int64)
+    # differs by 1, but float64 cannot represent the difference
+    assert not outputs_close(big, big + 1)
+    assert outputs_close(big, big.copy())
+    assert not outputs_close(np.array([True, False]),
+                             np.array([True, True]))
+    # float leaves keep the tolerance-based comparison
+    assert outputs_close(np.float32([1.0]), np.float32([1.001]))
+    # mixed int/float pairs still compare numerically
+    assert outputs_close(np.int32([2]), np.float64([2.0]))
 
 
 # ------------------------------------------------------------- GA penalty
