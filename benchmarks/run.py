@@ -78,9 +78,11 @@ def table_fig3(policy: str = "host-time"):
                 "summary_rows": report.summary_rows(),
             }
             continue
+        reused = sum(r.cache_stats.get("reused", 0) for r in report.records)
         emit(f"fig3/{name}/selected", sel.best_time_s * 1e6,
              f"{sel.paper_analogue}|{sel.method}|"
-             f"improvement={sel.improvement:.1f}x|policy={report.policy}")
+             f"improvement={sel.improvement:.1f}x|policy={report.policy}|"
+             f"reused={reused}")
         others = sorted((r for r in report.records if r is not sel
                          and r.best_time_s < float("inf")),
                         key=lambda r: r.best_time_s)

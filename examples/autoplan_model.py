@@ -22,7 +22,14 @@ def main():
     ap.add_argument("--generations", type=int, default=4)
     ap.add_argument("--population", type=int, default=5)
     ap.add_argument("--compile-workers", type=int, default=4,
-                    help="threads compiling one generation's candidates")
+                    help="threads tracing+compiling one generation's "
+                         "unique structural candidates")
+    ap.add_argument("--cache-dir", default="experiments/search_cache",
+                    help="directory for the on-disk search-cache JSON "
+                         "(repro.core.search_cache); a warm cache scores "
+                         "repeat searches with zero XLA compiles")
+    ap.add_argument("--no-disk-cache", action="store_true",
+                    help="keep the search cache in memory only")
     ap.add_argument("--policy", default="modeled",
                     help="plan-selection policy (repro.backends.policy): "
                          "modeled / host-time rank pure modeled step time; "
@@ -31,8 +38,7 @@ def main():
                          "power-envelope proxy)")
     args = ap.parse_args()
 
-    import time
-    from concurrent.futures import ThreadPoolExecutor
+    from pathlib import Path
 
     import jax
     import jax.numpy as jnp
@@ -40,11 +46,12 @@ def main():
     from repro.backends import get_policy
     from repro.configs import get_config
     from repro.configs.base import ShapeConfig, TrainConfig
-    from repro.core import cost_model
-    from repro.core.ga import Evaluation, GAConfig, run_ga
+    from repro.core import search_cache as sc
+    from repro.core.ga import GAConfig, run_ga
     from repro.core.measure import CompiledCostRunner
     from repro.dist.plan import Plan
     from repro.dist.sharding import Rules, tree_shardings
+    from repro.launch import specs
     from repro.launch.mesh import make_test_mesh
     from repro.models.lm import Model, param_axes
     from repro.train import optimizer, train_step as ts
@@ -64,9 +71,13 @@ def main():
     runner = CompiledCostRunner(mesh)
     pol = get_policy(args.policy)
 
-    def lower_candidate(genes):
-        """Trace + lower one plan candidate (no XLA compilation yet)."""
-        plan = Plan.from_genes(list(genes))
+    def lower_plan(plan):
+        """Trace + lower one plan candidate (no XLA compilation yet).
+
+        Runs on the evaluator's worker pool: tracing is no longer a serial
+        prefix of the generation, and only one candidate per unique
+        structural key is ever traced.
+        """
         rules = Rules(mesh, plan)
         model = Model(cfg, plan, rules)
         params_sds = jax.eval_shape(
@@ -74,56 +85,30 @@ def main():
         p_sh = tree_shardings(rules, param_axes(cfg), params_sds)
         opt_sds = jax.eval_shape(lambda p: optimizer.init(p, tcfg),
                                  params_sds)
-        batch_sds = {
-            "tokens": jax.ShapeDtypeStruct(
-                (shape.global_batch, shape.seq_len), jnp.int32),
-            "labels": jax.ShapeDtypeStruct(
-                (shape.global_batch, shape.seq_len), jnp.int32)}
+        batch_sds = specs.batch_specs(cfg, shape)   # arch-aware (mm extras)
         fn = ts.make_train_step(model, tcfg)
         jitted = jax.jit(fn, in_shardings=(p_sh, None, None, None))
         return jitted.lower(params_sds, opt_sds, batch_sds,
                             jax.ShapeDtypeStruct((), jnp.int32))
 
-    def evaluate_batch(generation):
-        """Score a whole GA generation: lower every candidate first, then
-        compile the lowered artifacts concurrently, then roofline-score —
-        instead of the serial lower/compile/score per candidate."""
-        lowered = []
-        for genes in generation:
-            bubble = cost_model.plan_bubble_fraction(
-                Plan.from_genes(list(genes)), pipe_ranks)
-            try:
-                lowered.append((lower_candidate(genes), bubble))
-            except Exception as e:
-                lowered.append(Evaluation(time_s=float("inf"), correct=False,
-                                          info={"error": repr(e)[:200]}))
-
-        def compile_one(item):
-            if isinstance(item, Evaluation):     # lowering already failed
-                return item
-            low, bubble = item
-            try:
-                t0 = time.perf_counter()
-                compiled = low.compile()
-                return runner.score_compiled(compiled,
-                                             time.perf_counter() - t0,
-                                             bubble_fraction=bubble)
-            except Exception as e:
-                return Evaluation(time_s=float("inf"), correct=False,
-                                  info={"error": repr(e)[:200]})
-
-        workers = max(1, min(args.compile_workers, len(lowered)))
-        with ThreadPoolExecutor(max_workers=workers) as ex:
-            return list(ex.map(compile_one, lowered))
-
-    def evaluate(genes):
-        return evaluate_batch([genes])[0]
+    # structure-keyed search cache: candidates are deduped by
+    # Plan.structural_key() before tracing (the 3x2 schedule combinations
+    # per structural plan share one compile), and the on-disk layer lets a
+    # repeat search over the same (arch, shape, mesh) run with zero compiles
+    cache_path = None if args.no_disk_cache else (
+        Path(args.cache_dir) / f"autoplan-{args.arch}.json")
+    cache = sc.SearchCache(cache_path)
+    evaluate_batch = sc.make_cached_batch_evaluator(
+        lower_plan, runner, cache,
+        key_extra=("autoplan", args.arch, shape.name,
+                   sc.mesh_fingerprint(mesh)),
+        pipe_ranks=pipe_ranks, workers=args.compile_workers)
 
     cards = Plan.gene_cardinalities()
     cfg_ga = GAConfig(population=args.population,
                       generations=args.generations, seed=0,
                       cardinalities=cards)
-    res = run_ga(len(cards), evaluate, cfg_ga,
+    res = run_ga(len(cards), evaluate_batch.evaluate, cfg_ga,
                  evaluate_batch=evaluate_batch)
 
     # policy selection over every compiled candidate: price is proxied by
@@ -149,9 +134,17 @@ def main():
     best = Plan.from_genes(list(best_genes))
     print(f"\nbest plan for {args.arch} under policy={pol.name} "
           f"(modeled step {best_eval.time_s*1e6:.1f} us on {mesh.shape}):")
-    for name, _ in Plan.GENE_SPACE:
-        print(f"  {name:22s} = {getattr(best, name)}")
-    print(f"measured {res.n_measurements} compiled candidates")
+    for gene in Plan.GENE_SPACE:
+        tag = "" if gene.structural else "   [model-only]"
+        print(f"  {gene.field:22s} = {getattr(best, gene.field)}{tag}")
+    st = cache.stats
+    print(f"scored {res.n_measurements} candidates | "
+          f"unique compiles {st.unique_compiles} | "
+          f"cache hit rate {st.hit_rate:.0%} "
+          f"(disk {st.disk_hits}) | "
+          f"compile time {st.compile_s:.1f}s")
+    if cache_path is not None:
+        print(f"search cache: {cache_path}")
 
 
 if __name__ == "__main__":

@@ -51,9 +51,12 @@ def main():
             mark = " <== selected" if r is report.selected else ""
             t = ("-" if r.best_time_s == float("inf")
                  else f"{r.best_time_s*1e3:8.2f} ms")
+            measured = r.cache_stats.get("measured", r.n_measurements)
+            reused = r.cache_stats.get("reused", 0)
+            dedupe = f", reused {reused}" if reused else ""
             print(f"  {r.order}. {r.paper_analogue:14s} {r.method:15s} "
                   f"{t}  x{r.improvement:6.2f}  "
-                  f"(measured {r.n_measurements} patterns){mark}")
+                  f"(measured {measured} patterns{dedupe}){mark}")
         sel = report.selected
         print(f"  offload pattern: "
               f"{ {k: v for k, v in sel.choice.items() if v != 'seq'} }")

@@ -47,6 +47,10 @@ class SearchResult:
     note: str = ""
     best_correct: bool = True     # False: best_time_s is a penalty, not a
                                   # usable pattern (planner must not select)
+    # verification-cost counters ({"measured": ..., "reused": ...} for the
+    # loop GA's choice-keyed measurement memo; search-cache stats for
+    # compiled paths) — observability only, never selection input
+    cache_stats: Dict = field(default_factory=dict)
 
 
 @dataclass

@@ -131,6 +131,21 @@ def roofline_terms(flops: float, bytes_accessed: float,
     )
 
 
+def roofline_from_analysis(analyzed: Dict[str, float], *, n_chips: int,
+                           model_flops: float = 0.0,
+                           bubble_fraction: float = 0.0) -> Roofline:
+    """Roofline from an ``analyze_hlo`` result dict.
+
+    The analysis dict is the cacheable face of a compiled artifact
+    (repro.core.search_cache stores exactly this), so re-scoring under a
+    different bubble fraction / policy is pure arithmetic — no HLO reparse.
+    """
+    return roofline_terms(analyzed["flops"], analyzed["bytes"],
+                          analyzed["collective_bytes"], n_chips=n_chips,
+                          model_flops=model_flops,
+                          bubble_fraction=bubble_fraction)
+
+
 # --------------------------------------------------------------------------
 # Pipeline-schedule terms (closed forms; repro.dist.schedules builds the
 # matching tick plans and tests pin the two together).

@@ -96,7 +96,10 @@ def run_ga(gene_length: int,
             cache[genes] = e
         return cache[genes]
 
-    def ev_population(pop: List[Tuple[int, ...]]) -> List[Evaluation]:
+    def ev_population(pop: List[Tuple[int, ...]]
+                      ) -> Tuple[List[Evaluation], int]:
+        """Evaluations for pop plus how many were fresh (not yet cached) —
+        the per-generation verification cost, recorded in history."""
         fresh = [g for g in dict.fromkeys(pop) if g not in cache]
         if fresh and evaluate_batch is not None:
             evs = evaluate_batch(fresh)
@@ -105,7 +108,7 @@ def run_ga(gene_length: int,
             for g, e in zip(fresh, evs):
                 e.penalty_s = cfg.penalty_s
                 cache[g] = e
-        return [ev(g) for g in pop]
+        return [ev(g) for g in pop], len(fresh)
 
     # initial population: all-zeros (the no-offload baseline is always a
     # candidate) + random individuals, de-duplicated when possible
@@ -119,7 +122,7 @@ def run_ga(gene_length: int,
 
     history: List[dict] = []
     for gen in range(cfg.generations):
-        evals = ev_population(pop)
+        evals, n_fresh = ev_population(pop)
         fits = [e.fitness for e in evals]
         best_i = max(range(len(pop)), key=lambda i: fits[i])
         history.append({
@@ -128,6 +131,7 @@ def run_ga(gene_length: int,
             "best_genes": pop[best_i],
             "mean_fitness": sum(fits) / len(fits),
             "n_correct": sum(e.correct for e in evals),
+            "n_fresh": n_fresh,
         })
 
         if gen == cfg.generations - 1:

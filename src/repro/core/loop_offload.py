@@ -50,12 +50,27 @@ def ga_search(app: OffloadableApp, dest: Destination, runner: TimedRunner,
                                 1, 0.0, note="no free loops",
                                 best_correct=ev.correct)
 
+    # structural dedupe for the verification environment: distinct gene
+    # strings can build the *same* offload pattern (a gene set on a nest
+    # without this destination's impl falls back to "seq"), and measuring
+    # one pattern twice is pure verification cost — memoize Evaluations by
+    # the canonical choice dict, the paper-side analogue of
+    # repro.core.search_cache's structural key
+    measured: Dict[Tuple[Tuple[str, str], ...], Evaluation] = {}
+    reused = [0]
+
     def evaluate(genes: Tuple[int, ...]) -> Evaluation:
         choice = dict(fixed_choice)
         for nest, g in zip(free_nests, genes):
             choice[nest.name] = dest.key if (g and dest.key in nest.impls) \
                 else "seq"
-        return _measure_choice(app, choice, runner, inputs, ref_out)
+        ckey = tuple(sorted(choice.items()))
+        if ckey in measured:
+            reused[0] += 1
+            return measured[ckey]
+        ev = _measure_choice(app, choice, runner, inputs, ref_out)
+        measured[ckey] = ev
+        return ev
 
     t0 = time.perf_counter()
     res: GAResult = ga_mod.run_ga(gene_len, evaluate, cfg)
@@ -68,7 +83,8 @@ def ga_search(app: OffloadableApp, dest: Destination, runner: TimedRunner,
         destination=dest.name, best_choice=best_choice,
         best_time_s=res.best_eval.effective_time,
         n_measurements=res.n_measurements, verify_elapsed_s=elapsed,
-        history=res.history, best_correct=res.best_eval.correct)
+        history=res.history, best_correct=res.best_eval.correct,
+        cache_stats={"measured": len(measured), "reused": reused[0]})
 
 
 def fpga_search(app: OffloadableApp, dest: Destination, runner: TimedRunner,

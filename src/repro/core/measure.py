@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core.ga import Evaluation
 from repro.core import cost_model
-from repro.core.hlo_analysis import analyze_hlo
+from repro.core.search_cache import analyze_compiled
 
 
 def outputs_close(a, b, rtol=1e-2, atol=1e-2) -> bool:
@@ -114,6 +114,30 @@ class CompiledCostRunner:
         self.n_chips = n_chips or (mesh.size if mesh is not None else 1)
         self.model_flops = model_flops
 
+    def score_analysis(self, analyzed: dict, verify_s: float = 0.0, *,
+                       bubble_fraction: float = 0.0,
+                       cache_hit: Optional[bool] = None) -> Evaluation:
+        """Roofline-score an ``analyze_hlo`` result dict — pure arithmetic.
+
+        This is the cache-hit scoring path (repro.core.search_cache): the
+        analysis dict stands in for the compiled artifact, so re-scoring
+        the same artifact under a different ``bubble_fraction`` or
+        selection policy never touches HLO text.
+        """
+        try:
+            rl = cost_model.roofline_from_analysis(
+                analyzed, n_chips=self.n_chips,
+                model_flops=self.model_flops,
+                bubble_fraction=bubble_fraction)
+            info = {"roofline": rl.to_dict(), "verify_s": verify_s}
+            if cache_hit is not None:
+                info["cache_hit"] = cache_hit
+            return Evaluation(time_s=rl.step_time_s, correct=True,
+                              info=info)
+        except Exception as e:
+            return Evaluation(time_s=float("inf"), correct=False,
+                              info={"error": repr(e)[:500]})
+
     def score_compiled(self, compiled, verify_s: float = 0.0, *,
                        bubble_fraction: float = 0.0) -> Evaluation:
         """Roofline-score an already-compiled executable.
@@ -123,21 +147,17 @@ class CompiledCostRunner:
         autoplan_model.py) can score the artifacts afterwards.
         ``bubble_fraction`` folds a pipeline schedule's idle fraction into
         the modeled step time (``cost_model.plan_bubble_fraction``), so the
-        ``modeled`` policy ranks schedule genes correctly.
+        ``modeled`` policy ranks schedule genes correctly.  The HLO
+        analysis is memoized per artifact (search_cache.analyze_compiled):
+        scoring the same executable twice parses its text once.
         """
         try:
-            analyzed = analyze_hlo(compiled.as_text())
-            rl = cost_model.roofline_terms(
-                analyzed["flops"], analyzed["bytes"],
-                analyzed["collective_bytes"], n_chips=self.n_chips,
-                model_flops=self.model_flops,
-                bubble_fraction=bubble_fraction)
-            return Evaluation(time_s=rl.step_time_s, correct=True,
-                              info={"roofline": rl.to_dict(),
-                                    "verify_s": verify_s})
+            analyzed = analyze_compiled(compiled)
         except Exception as e:
             return Evaluation(time_s=float("inf"), correct=False,
                               info={"error": repr(e)[:500]})
+        return self.score_analysis(analyzed, verify_s,
+                                   bubble_fraction=bubble_fraction)
 
     def measure_lowered(self, jitted, *args_sds,
                         bubble_fraction: float = 0.0) -> Evaluation:

@@ -74,6 +74,9 @@ class VerificationRecord:
     # sharding, and the roofline breakdown behind it
     mesh_time_s: Optional[float] = None
     mesh_info: Dict = field(default_factory=dict)
+    # verification-cost counters from the search (e.g. the loop GA's
+    # choice-keyed measurement memo: measured / reused)
+    cache_stats: Dict = field(default_factory=dict)
 
 
 @dataclass
@@ -199,7 +202,8 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
             met_target=res.best_correct and targets.met(
                 res.best_time_s, ref_time, backend.price),
             correct=res.best_correct,
-            choice=dict(res.best_choice), note=res.note)
+            choice=dict(res.best_choice), note=res.note,
+            cache_stats=dict(getattr(res, "cache_stats", {}) or {}))
         records.append(rec)
 
         # mesh bridge: compile the winner for an actual mesh through the

@@ -1,0 +1,406 @@
+"""Structure-keyed search cache: plan search at O(unique artifacts).
+
+The plan GA's bottleneck is the verification environment: every candidate
+must be traced, lowered, XLA-compiled and its HLO re-analyzed — yet many
+candidates share the *identical* compiled artifact (the model-only
+pipeline-schedule genes differ only in the modeled bubble term, see
+``repro.dist.plan.Gene.structural``), and repeated invocations recompile
+artifacts an earlier run already measured.  This module collapses the
+per-candidate cost to per-unique-artifact cost with three layers:
+
+  * an in-memory **artifact layer** (``get_compiled`` / ``put_compiled``)
+    holding live compiled executables for the current process;
+  * a memory + on-disk **analysis layer** (``lookup`` / ``put``): a JSON
+    file mapping ``sha256(structural key + run identity)`` to the
+    ``analyze_hlo`` result, the compile seconds it cost, and arbitrary
+    caller extras — a warm cache scores candidates with pure roofline
+    arithmetic, zero compiles;
+  * a per-artifact ``analyze_hlo`` memo (:func:`analyze_compiled`) so an
+    executable's HLO text is parsed at most once no matter how many
+    policies / bubble fractions re-score it.
+
+:func:`make_cached_batch_evaluator` packages the layers as a
+``run_ga(evaluate_batch=...)`` callback: a generation is deduped by
+``Plan.structural_key()`` *before* tracing, unique keys are traced +
+compiled on a thread pool, and every candidate is scored from the shared
+analysis with its own ``bubble_fraction``.
+
+Disk entries that are corrupted, truncated, or from an incompatible cache
+version are ignored (the key recompiles); a cache failure is never an
+error.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import threading
+import time
+import weakref
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.hlo_analysis import analyze_hlo
+
+CACHE_VERSION = 1
+# an analysis payload must feed cost_model.roofline_from_analysis
+REQUIRED_ANALYSIS_KEYS = ("flops", "bytes", "collective_bytes")
+
+
+# --------------------------------------------------------------------- keys
+def _jsonable(obj):
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(x) for x in obj]
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+def canonical_key(key) -> str:
+    """Stable JSON string for an arbitrarily nested key structure."""
+    return json.dumps(_jsonable(key), sort_keys=True, separators=(",", ":"))
+
+
+def hash_key(key) -> str:
+    return hashlib.sha256(canonical_key(key).encode()).hexdigest()[:32]
+
+
+def runtime_fingerprint() -> str:
+    """Compiler identity stamped into the disk layer.
+
+    An analysis payload describes what *this* jax/XLA on *this* platform
+    lowered — a different jax version or device kind produces different
+    HLO, so a file written by another runtime must read as cold, not as
+    hits serving stale rooflines.
+    """
+    try:
+        import jax
+        return f"jax-{jax.__version__}-{jax.default_backend()}"
+    except Exception:
+        return "nojax"
+
+
+def mesh_fingerprint(mesh) -> tuple:
+    """Cache-key identity of a mesh: axis names/sizes + device count.
+
+    Structural keys must distinguish artifacts compiled for different
+    meshes; the axis layout and device count are what SPMD partitioning
+    sees.
+    """
+    if mesh is None:
+        return ("nomesh",)
+    try:
+        return tuple((str(a), int(s)) for a, s in mesh.shape.items())
+    except Exception:
+        return (repr(mesh),)
+
+
+# -------------------------------------------------------------- statistics
+@dataclass
+class CacheStats:
+    """Counters for search observability (hit/miss are per candidate)."""
+    candidates: int = 0      # candidates scored through the cache
+    hits: int = 0            # scored without a fresh compile
+    disk_hits: int = 0       # subset of hits served by the on-disk layer
+    misses: int = 0          # fresh lower+compile (== unique artifacts)
+    compile_s: float = 0.0   # wall seconds spent in fresh lower+compile
+
+    @property
+    def unique_compiles(self) -> int:
+        return self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {"candidates": self.candidates, "hits": self.hits,
+                "disk_hits": self.disk_hits,
+                "unique_compiles": self.unique_compiles,
+                "hit_rate": round(self.hit_rate, 4),
+                "compile_s": round(self.compile_s, 3)}
+
+
+# ------------------------------------------------------------------- cache
+class SearchCache:
+    """Two-layer structure-keyed cache (see module docstring).
+
+    ``path=None`` keeps everything in memory; with a path, valid entries
+    are loaded eagerly and every ``put`` autosaves (atomic replace), so
+    concurrent / aborted runs leave at worst a complete older file.
+    """
+
+    def __init__(self, path: Optional[os.PathLike] = None, *,
+                 autosave: bool = True, artifact_capacity: int = 16):
+        self.path = Path(path) if path is not None else None
+        self.autosave = autosave
+        self.artifact_capacity = artifact_capacity
+        self._lock = threading.RLock()
+        self._entries: Dict[str, dict] = {}
+        self._from_disk: set = set()
+        self._failed: Dict[str, dict] = {}      # memory-only failure memo
+        # memory-only executables, FIFO-bounded: an XLA executable can be
+        # huge and the analysis layer is all that scoring ever needs again
+        self._compiled: Dict[str, Any] = {}
+        self.stats = CacheStats()
+        if self.path is not None:
+            self._load()
+
+    # ---------------------------------------------------------- disk layer
+    @staticmethod
+    def valid_payload(payload) -> bool:
+        """True iff a payload can score candidates without recompiling."""
+        if not isinstance(payload, dict):
+            return False
+        analysis = payload.get("analysis")
+        if not isinstance(analysis, dict):
+            return False
+        return all(isinstance(analysis.get(k), (int, float))
+                   for k in REQUIRED_ANALYSIS_KEYS)
+
+    def _load(self):
+        try:
+            raw = json.loads(self.path.read_text())
+        except Exception:
+            return                   # missing/corrupted file == cold cache
+        if not isinstance(raw, dict) or raw.get("version") != CACHE_VERSION:
+            return
+        if raw.get("runtime") != runtime_fingerprint():
+            return               # another jax/XLA/platform wrote this file
+        entries = raw.get("entries")
+        if not isinstance(entries, dict):
+            return
+        for h, payload in entries.items():
+            if self.valid_payload(payload):      # stale/partial entry: skip
+                self._entries[h] = payload
+                self._from_disk.add(h)
+
+    def save(self):
+        if self.path is None:
+            return
+        with self._lock:
+            data = {"version": CACHE_VERSION,
+                    "runtime": runtime_fingerprint(),
+                    "entries": self._entries}
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       prefix=self.path.name, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(data, f)
+                os.replace(tmp, self.path)
+            except Exception:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+
+    # ------------------------------------------------------ analysis layer
+    def lookup(self, key, *, count: bool = True) -> Optional[dict]:
+        """Analysis payload for ``key`` or None (a miss is not counted —
+        the subsequent :meth:`put` / :meth:`put_failure` counts it)."""
+        h = hash_key(key)
+        with self._lock:
+            payload = self._entries.get(h)
+            if payload is None:
+                payload = self._failed.get(h)
+            if payload is not None and count:
+                self.stats.hits += 1
+                if h in self._from_disk:
+                    self.stats.disk_hits += 1
+            return payload
+
+    def put(self, key, analysis: Dict[str, float], compile_s: float,
+            extra: Optional[dict] = None) -> dict:
+        payload = {"analysis": {k: float(v) for k, v in analysis.items()},
+                   "compile_s": float(compile_s)}
+        if extra:
+            payload["extra"] = extra
+        with self._lock:
+            self._entries[hash_key(key)] = payload
+            self.stats.misses += 1
+            self.stats.compile_s += float(compile_s)
+        if self.autosave:
+            self.save()
+        return payload
+
+    def put_failure(self, key, error: str) -> dict:
+        """Memoize a lower/compile failure (memory only: a failure may be
+        environmental, so it must not poison the disk layer)."""
+        payload = {"error": error}
+        with self._lock:
+            self._failed[hash_key(key)] = payload
+            self.stats.misses += 1
+        return payload
+
+    def from_disk(self, key) -> bool:
+        return hash_key(key) in self._from_disk
+
+    # ------------------------------------------------------ artifact layer
+    def get_compiled(self, key):
+        return self._compiled.get(hash_key(key))
+
+    def put_compiled(self, key, compiled):
+        with self._lock:
+            while len(self._compiled) >= max(self.artifact_capacity, 1):
+                self._compiled.pop(next(iter(self._compiled)))
+            self._compiled[hash_key(key)] = compiled
+
+
+# ----------------------------------------------- analyze_hlo memoization
+_analysis_memo: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+# id-keyed fallback for non-weakref-able executables; holding a strong ref
+# pins the id, bounded FIFO so it cannot grow without limit
+_analysis_memo_strong: Dict[int, Tuple[Any, Dict[str, float]]] = {}
+_ANALYSIS_MEMO_STRONG_MAX = 64
+_analysis_lock = threading.Lock()
+
+
+def analyze_compiled(compiled) -> Dict[str, float]:
+    """Memoized ``analyze_hlo(compiled.as_text())``.
+
+    ``as_text()`` (an executable-sized string build) and the multi-regex
+    HLO walk run at most once per artifact — re-scoring the same executable
+    under a different bubble fraction or selection policy is free.
+
+    The parse itself runs outside the memo lock (double-checked) so the
+    batch evaluator's worker pool analyzes distinct artifacts
+    concurrently; two threads racing on the *same* artifact may parse it
+    twice, which is merely the cost this memo usually saves.
+    """
+    def _get():
+        try:
+            return _analysis_memo.get(compiled)
+        except TypeError:                        # not weakref-able
+            entry = _analysis_memo_strong.get(id(compiled))
+            return entry[1] if entry is not None \
+                and entry[0] is compiled else None
+
+    with _analysis_lock:
+        cached = _get()
+    if cached is not None:
+        return cached
+    analysis = analyze_hlo(compiled.as_text())
+    with _analysis_lock:
+        cached = _get()
+        if cached is not None:
+            return cached
+        try:
+            _analysis_memo[compiled] = analysis
+        except TypeError:
+            while len(_analysis_memo_strong) >= _ANALYSIS_MEMO_STRONG_MAX:
+                _analysis_memo_strong.pop(next(iter(_analysis_memo_strong)))
+            _analysis_memo_strong[id(compiled)] = (compiled, analysis)
+        return analysis
+
+
+# ------------------------------------------------------- batch evaluator
+def make_cached_batch_evaluator(
+        lower_plan: Callable[[Any], Any],
+        runner,
+        cache: Optional[SearchCache] = None,
+        *,
+        key_extra: Sequence = (),
+        pipe_ranks: int = 1,
+        workers: int = 4,
+        from_genes: Optional[Callable[[Tuple[int, ...]], Any]] = None,
+) -> Callable[[List[Tuple[int, ...]]], List[Any]]:
+    """Build a ``run_ga(evaluate_batch=...)`` callback over the cache.
+
+    ``lower_plan(plan)`` traces + lowers one candidate and returns a jax
+    ``Lowered`` (it runs on the worker pool, so tracing is no longer a
+    serial prefix of the generation); ``runner`` is a
+    :class:`repro.core.measure.CompiledCostRunner`; ``key_extra`` names the
+    run identity ((arch, shape, mesh fingerprint, ...)) baked into every
+    cache key; ``pipe_ranks`` sizes the pipeline axis the model-only
+    schedule genes are charged against.
+
+    Per generation: candidates are deduped by ``plan.structural_key()``
+    *before* any tracing, unique missing keys are traced/compiled/analyzed
+    concurrently, and each candidate is scored from its key's analysis with
+    its own bubble fraction — at most one XLA compile per unique structural
+    key, ever.  The callback exposes ``.cache`` (the :class:`SearchCache`)
+    and ``.evaluate`` (a per-individual fallback for ``run_ga``).
+    """
+    from concurrent.futures import ThreadPoolExecutor
+
+    from repro.core import cost_model
+    from repro.core.ga import Evaluation
+
+    if cache is None:
+        cache = SearchCache()
+    if from_genes is None:
+        from repro.dist.plan import Plan
+
+        def from_genes(genes):
+            return Plan.from_genes(list(genes))
+
+    key_prefix = tuple(key_extra)
+
+    def evaluate_batch(generation: List[Tuple[int, ...]]) -> List[Any]:
+        plans = [from_genes(g) for g in generation]
+        keys = [(key_prefix, p.structural_key()) for p in plans]
+        hashes = [hash_key(k) for k in keys]
+        cache.stats.candidates += len(generation)
+
+        payloads: Dict[str, dict] = {}
+        todo: Dict[str, tuple] = {}              # hash -> (key, plan)
+        for h, key, plan in zip(hashes, keys, plans):
+            if h in payloads or h in todo:
+                continue
+            payload = cache.lookup(key, count=False)
+            if payload is not None:
+                payloads[h] = payload
+            else:
+                todo[h] = (key, plan)
+
+        def build(item):
+            key, plan = item
+            try:
+                t0 = time.perf_counter()
+                compiled = lower_plan(plan).compile()
+                dt = time.perf_counter() - t0
+                analysis = analyze_compiled(compiled)
+                cache.put_compiled(key, compiled)
+                return cache.put(key, analysis, dt)
+            except Exception as e:     # compile error == conversion fails
+                return cache.put_failure(key, repr(e)[:500])
+
+        if todo:
+            n = max(1, min(workers, len(todo)))
+            with ThreadPoolExecutor(max_workers=n) as ex:
+                for h, payload in zip(todo, ex.map(build, todo.values())):
+                    payloads[h] = payload
+        # per-candidate accounting: every candidate that did not pay for
+        # its own compile is a hit (put/put_failure counted the misses)
+        cache.stats.hits += len(generation) - len(todo)
+        for h, key in zip(hashes, keys):
+            if h not in todo and cache.from_disk(key):
+                cache.stats.disk_hits += 1
+
+        out = []
+        for h, key, plan in zip(hashes, keys, plans):
+            payload = payloads[h]
+            if "error" in payload:
+                out.append(Evaluation(time_s=float("inf"), correct=False,
+                                      info={"error": payload["error"]}))
+                continue
+            bubble = cost_model.plan_bubble_fraction(plan, pipe_ranks)
+            fresh = h in todo
+            out.append(runner.score_analysis(
+                payload["analysis"],
+                payload.get("compile_s", 0.0) if fresh else 0.0,
+                bubble_fraction=bubble, cache_hit=not fresh))
+        return out
+
+    def evaluate(genes):
+        return evaluate_batch([genes])[0]
+
+    evaluate_batch.cache = cache
+    evaluate_batch.evaluate = evaluate
+    return evaluate_batch

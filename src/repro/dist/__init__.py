@@ -5,8 +5,11 @@ Public API (stable — later PRs build on this):
 
   * :mod:`repro.dist.plan`      — :class:`Plan` execution-plan dataclass with
     the categorical ``GENE_SPACE`` the GA searches (``from_genes`` /
-    ``to_genes`` / ``gene_cardinalities``), including the pipeline genes
-    ``pipeline_schedule`` / ``virtual_stages``.
+    ``to_genes`` / ``gene_cardinalities``); ``Gene(field, choices,
+    structural)`` entries flag the model-only pipeline genes
+    (``pipeline_schedule`` / ``virtual_stages``), and
+    ``Plan.structural_key()`` is the compiled-artifact identity
+    ``repro.core.search_cache`` dedupes compiles by.
   * :mod:`repro.dist.sharding`  — :class:`Rules` (logical-axis -> mesh-axis
     mapping with largest-divisible-prefix / duplicate-axis fallback),
     :class:`NullRules`, ``tree_shardings`` and ``batch_axes``.

@@ -10,8 +10,24 @@ layout.  It is the framework analogue of the paper's per-loop gene string:
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, NamedTuple, Optional, Sequence, Tuple
+
+
+class Gene(NamedTuple):
+    """One ``GENE_SPACE`` entry.
+
+    ``structural=False`` marks a *model-only* gene: flipping it never changes
+    the lowered/compiled artifact, only the analytic cost model on top of it
+    (the pipeline-schedule genes are scored via ``bubble_fraction``
+    arithmetic — the verification machine never executes the pod pipeline).
+    Everything structural participates in :meth:`Plan.structural_key`, the
+    cache key ``repro.core.search_cache`` dedupes compiles by.
+    """
+    field: str
+    choices: tuple
+    structural: bool = True
 
 
 @dataclass
@@ -45,42 +61,67 @@ class Plan:
     # ------------------------------------------------------------- genes
     @classmethod
     def gene_cardinalities(cls) -> List[int]:
-        return [len(choices) for _, choices in _GENE_SPACE]
+        return [len(g.choices) for g in _GENE_SPACE]
 
     @classmethod
     def from_genes(cls, genes: Sequence[int], name: str = "ga-candidate"
                    ) -> "Plan":
         kw = {}
-        for (field_name, choices), g in zip(_GENE_SPACE, genes):
-            kw[field_name] = choices[int(g) % len(choices)]
+        for gene, g in zip(_GENE_SPACE, genes):
+            kw[gene.field] = gene.choices[int(g) % len(gene.choices)]
         return cls(name=name, **kw)
 
     def to_genes(self) -> List[int]:
         genes = []
-        for field_name, choices in _GENE_SPACE:
-            v = getattr(self, field_name)
-            genes.append(choices.index(v) if v in choices else 0)
+        for gene in _GENE_SPACE:
+            v = getattr(self, gene.field)
+            genes.append(gene.choices.index(v) if v in gene.choices else 0)
         return genes
 
+    def structural_key(self) -> Tuple[Tuple[str, Any], ...]:
+        """Hashable identity of the *compiled artifact* this plan lowers to.
 
-# Categorical gene space for the framework-side GA: (field, choices) pairs.
-# Order is part of the public API: gene i of an individual indexes
-# _GENE_SPACE[i][1].  Exposed as the plain class attribute Plan.GENE_SPACE
-# (not a dataclass field, so dataclasses.asdict stays JSON-clean).
-_GENE_SPACE: Tuple[Tuple[str, tuple], ...] = (
-    ("remat", ("none", "block", "full")),
-    ("microbatches", (1, 2, 4, 8)),
-    ("grad_compression", (False, True)),
-    ("vocab_chunk", (0, 512, 2048)),
-    ("gqa_grouped", (True, False)),
-    ("blockwise_attn_threshold", (512, 1024, 1 << 30)),
-    ("attn_block_q", (256, 512)),
-    ("attn_block_kv", (256, 512)),
-    ("moe_impl", ("gspmd", "shardmap_ep")),
-    ("decode_kv_seq_shard", (False, True)),
-    ("pipeline_schedule", ("gpipe", "one_f_one_b", "interleaved")),
-    ("virtual_stages", (1, 2)),
+        Two plans with equal structural keys trace/lower/compile to the
+        same executable: every dataclass field participates except ``name``
+        (a label) and the model-only genes (``MODEL_ONLY_FIELDS`` — the
+        pipeline-schedule genes, which only move the modeled bubble term).
+        ``repro.core.search_cache`` keys its compile/analysis layers on this.
+        """
+        return tuple((f.name, getattr(self, f.name))
+                     for f in dataclasses.fields(self)
+                     if f.name != "name" and f.name not in MODEL_ONLY_FIELDS)
+
+
+# Categorical gene space for the framework-side GA: Gene(field, choices,
+# structural) triples.  Order is part of the public API: gene i of an
+# individual indexes _GENE_SPACE[i].choices.  Exposed as the plain class
+# attribute Plan.GENE_SPACE (not a dataclass field, so dataclasses.asdict
+# stays JSON-clean).
+#
+# Structural/model-only contract: a gene is structural when flipping it
+# changes the traced/lowered/compiled step; the pipeline-schedule genes are
+# model-only — the compiled artifact stays the dp/tp step and the schedule
+# is charged as a bubble_fraction on top (repro.core.cost_model), so the
+# 3x2 schedule combinations per structural plan share one compile.
+_GENE_SPACE: Tuple[Gene, ...] = (
+    Gene("remat", ("none", "block", "full")),
+    Gene("microbatches", (1, 2, 4, 8)),
+    Gene("grad_compression", (False, True)),
+    Gene("vocab_chunk", (0, 512, 2048)),
+    Gene("gqa_grouped", (True, False)),
+    Gene("blockwise_attn_threshold", (512, 1024, 1 << 30)),
+    Gene("attn_block_q", (256, 512)),
+    Gene("attn_block_kv", (256, 512)),
+    Gene("moe_impl", ("gspmd", "shardmap_ep")),
+    Gene("decode_kv_seq_shard", (False, True)),
+    Gene("pipeline_schedule", ("gpipe", "one_f_one_b", "interleaved"),
+         structural=False),
+    Gene("virtual_stages", (1, 2), structural=False),
 )
+
+# plan fields that never reach the compiled artifact (scored analytically)
+MODEL_ONLY_FIELDS = frozenset(g.field for g in _GENE_SPACE
+                              if not g.structural)
 
 # make the class attribute readable without an instance too
 Plan.GENE_SPACE = _GENE_SPACE

@@ -110,10 +110,12 @@ def build_step(cfg, shape, mesh, plan):
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              plan_name: str = "auto", out_dir: Path = OUT_DIR,
-             overrides: dict = None, policy: str = "host-time") -> dict:
+             overrides: dict = None, policy: str = "host-time",
+             use_cache: bool = True) -> dict:
     import jax
     from repro.configs import get_config, get_shape, cell_runnable
     from repro.core import cost_model
+    from repro.core import search_cache as sc
     from repro.launch.mesh import make_production_mesh
 
     cfg = get_config(arch)
@@ -130,21 +132,55 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     plan = default_plan(cfg, shape, plan_name, overrides)
     result["plan_detail"] = dataclasses.asdict(plan)
 
+    # structure-keyed compile cache: cells whose plans differ only in
+    # model-only genes (e.g. --schedule variants of the same baseline)
+    # share one compiled artifact, and repeat invocations skip XLA entirely
+    cache = sc.SearchCache((out_dir / "search_cache.json") if use_cache
+                           else None)
+    cache_key = ("dryrun", arch, shape_name, mesh_kind,
+                 sc.mesh_fingerprint(mesh), plan.structural_key())
+    cache.stats.candidates += 1
     t0 = time.time()
-    fn, args, shardings, donate = build_step(cfg, shape, mesh, plan)
-    jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
-    lowered = jitted.lower(*args)
-    t_lower = time.time() - t0
-    t0 = time.time()
-    compiled = lowered.compile()
-    t_compile = time.time() - t0
+    payload = cache.lookup(cache_key)
+    cache_hit = (payload is not None and "error" not in payload
+                 and isinstance(payload.get("extra"), dict)
+                 and "memory" in payload["extra"])
+    if cache_hit:
+        analyzed = payload["analysis"]
+        t_lower = payload["extra"].get("lower_s", 0.0)
+        t_compile = payload.get("compile_s", 0.0)
+        ca = payload["extra"].get("xla_cost_analysis", {})
+        memory = payload["extra"]["memory"]
+        verify_s = time.time() - t0        # actual cost this run: a lookup
+    else:
+        fn, args, shardings, donate = build_step(cfg, shape, mesh, plan)
+        jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        verify_s = t_lower + t_compile
 
-    from repro.dist.compat import cost_analysis_dict
-    ca = cost_analysis_dict(compiled)
-    ma = compiled.memory_analysis()
-    hlo = compiled.as_text()
-    from repro.core.hlo_analysis import analyze_hlo
-    analyzed = analyze_hlo(hlo)      # loop-aware per-device costs
+        from repro.dist.compat import cost_analysis_dict
+        ca_raw = cost_analysis_dict(compiled)
+        ca = {k: float(v) for k, v in ca_raw.items()
+              if isinstance(v, (int, float))
+              and ("flops" in k or k == "bytes accessed")}
+        ma = compiled.memory_analysis()
+        memory = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_estimate_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        }
+        analyzed = sc.analyze_compiled(compiled)  # loop-aware per-device
+        cache.put(cache_key, analyzed, t_compile,
+                  extra={"lower_s": round(t_lower, 2),
+                         "memory": memory, "xla_cost_analysis": ca})
     mf = cost_model.model_flops_for(cfg, shape)
     # pipeline-schedule genes stretch the step by the schedule's bubble —
     # but only for cells that explicitly request a pipeline (--schedule /
@@ -163,19 +199,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         "n_chips": n_chips,
         "lower_s": round(t_lower, 2),
         "compile_s": round(t_compile, 2),
-        "xla_cost_analysis": {k: float(v) for k, v in ca.items()
-                              if isinstance(v, (int, float))
-                              and ("flops" in k or k == "bytes accessed")},
+        "verify_s": round(verify_s, 3),
+        "cache_hit": cache_hit,
+        "xla_cost_analysis": ca,
         "hlo_analysis": {k: float(v) for k, v in analyzed.items()},
-        "memory": {
-            "argument_bytes": ma.argument_size_in_bytes,
-            "output_bytes": ma.output_size_in_bytes,
-            "temp_bytes": ma.temp_size_in_bytes,
-            "alias_bytes": ma.alias_size_in_bytes,
-            "peak_estimate_bytes": ma.argument_size_in_bytes
-            + ma.output_size_in_bytes + ma.temp_size_in_bytes
-            - ma.alias_size_in_bytes,
-        },
+        "memory": memory,
         "collectives": {k.replace("coll_", ""): v
                         for k, v in analyzed.items()
                         if k.startswith("coll_")},
@@ -183,9 +211,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                               for k, v in analyzed.items()
                               if k.startswith("count_")},
         "roofline": rl.to_dict(),
-        "fits_16GiB": (ma.argument_size_in_bytes + ma.output_size_in_bytes
-                       + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
-        < 16 * 1024**3,
+        "fits_16GiB": memory["peak_estimate_bytes"] < 16 * 1024**3,
     })
     # selection-policy score (repro.backends.policy): the ranking key the
     # cost policy assigns this cell — price is the chip count, so
@@ -231,6 +257,9 @@ def main():
                          "per (arch, shape) under the policy is printed.")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-search-cache", action="store_true",
+                    help="bypass the structure-keyed compile cache "
+                         "(<out>/search_cache.json) and always recompile")
     ap.add_argument("--timeout", type=int, default=3000)
     ap.add_argument("--out", default=str(OUT_DIR))
     args = ap.parse_args()
@@ -280,6 +309,8 @@ def main():
                 cmd += ["--virtual-stages", str(args.virtual_stages)]
             if args.plan_json:
                 cmd += ["--plan-json", args.plan_json]
+            if args.no_search_cache:
+                cmd += ["--no-search-cache"]
             print(f"[dryrun] {arch} × {shape} × {mesh_kind} ...",
                   flush=True)
             try:
@@ -342,7 +373,8 @@ def main():
     path = cell_path(out_dir, args.arch, args.shape, args.mesh, plan_tag)
     try:
         res = run_cell(args.arch, args.shape, args.mesh, args.plan, out_dir,
-                       all_overrides or None, policy=args.policy)
+                       all_overrides or None, policy=args.policy,
+                       use_cache=not args.no_search_cache)
     except Exception:
         res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "error": traceback.format_exc()[-6000:]}
@@ -352,7 +384,8 @@ def main():
     path.write_text(json.dumps(res, indent=1))
     print(json.dumps({k: v for k, v in res.items()
                       if k in ("arch", "shape", "mesh", "compile_s",
-                               "roofline", "fits_16GiB", "skip")}, indent=1))
+                               "verify_s", "cache_hit", "roofline",
+                               "fits_16GiB", "skip")}, indent=1))
 
 
 if __name__ == "__main__":

@@ -25,21 +25,22 @@ def mesh():
 # ------------------------------------------------------------------- plan
 def test_plan_gene_space_matches_fields():
     p = Plan()
-    for field_name, choices in Plan.GENE_SPACE:
-        assert hasattr(p, field_name), field_name
-        assert len(choices) >= 2, field_name
+    for gene in Plan.GENE_SPACE:
+        assert hasattr(p, gene.field), gene.field
+        assert len(gene.choices) >= 2, gene.field
+        assert isinstance(gene.structural, bool)
 
 
 def test_plan_genes_roundtrip_all_fields():
     cards = Plan.gene_cardinalities()
     assert len(cards) == len(Plan.GENE_SPACE)
     # every gene value decodes to a plan that re-encodes to the same genes
-    for i, (field_name, choices) in enumerate(Plan.GENE_SPACE):
-        for g in range(len(choices)):
+    for i, gene in enumerate(Plan.GENE_SPACE):
+        for g in range(len(gene.choices)):
             genes = [0] * len(cards)
             genes[i] = g
             q = Plan.from_genes(genes)
-            assert getattr(q, field_name) == choices[g]
+            assert getattr(q, gene.field) == gene.choices[g]
             assert q.to_genes()[i] == g
 
 

@@ -109,6 +109,20 @@ def test_ga_deterministic_given_seed():
         [h["best_time_s"] for h in b.history]
 
 
+def test_ga_history_records_fresh_evaluations():
+    """history[i]["n_fresh"] is the generation's verification cost: gen 0
+    pays for the whole population, later generations only for unseen gene
+    strings, and the sum equals the total measurements."""
+    def evaluate(genes):
+        return eval_from_time(1.0 + sum(genes) * 0.1)
+
+    res = run_ga(5, evaluate, GAConfig(population=5, generations=5, seed=3))
+    fresh = [h["n_fresh"] for h in res.history]
+    assert fresh[0] == 5                      # initial population is unseen
+    assert all(0 <= f <= 5 for f in fresh)
+    assert sum(fresh) == res.n_measurements
+
+
 def test_ga_categorical_genes():
     cards = [3, 4, 2]
 

@@ -1,0 +1,332 @@
+"""Structure-keyed search cache (repro.core.search_cache).
+
+Pins the PR-4 contract: plan search pays one XLA compile per *unique
+structural artifact*, not per candidate — schedule-only gene flips share an
+artifact, warm disk caches compile nothing, corrupted caches degrade to a
+recompile, and ``analyze_hlo`` runs at most once per executable.
+"""
+import json
+
+import pytest
+
+from repro.core import search_cache as sc
+from repro.core.ga import GAConfig, run_ga
+from repro.core.measure import CompiledCostRunner
+from repro.dist.plan import MODEL_ONLY_FIELDS, Plan
+
+
+# ----------------------------------------------------------- structural key
+def genes_with(**overrides):
+    idx = {g.field: i for i, g in enumerate(Plan.GENE_SPACE)}
+    genes = [0] * len(Plan.GENE_SPACE)
+    for f, choice_value in overrides.items():
+        genes[idx[f]] = Plan.GENE_SPACE[idx[f]].choices.index(choice_value)
+    return tuple(genes)
+
+
+def test_model_only_fields_are_the_schedule_genes():
+    assert MODEL_ONLY_FIELDS == {"pipeline_schedule", "virtual_stages"}
+    for g in Plan.GENE_SPACE:
+        assert g.structural == (g.field not in MODEL_ONLY_FIELDS)
+
+
+def test_structural_key_ignores_schedule_genes():
+    base = Plan.from_genes(list(genes_with()))
+    sched = Plan.from_genes(list(genes_with(
+        pipeline_schedule="interleaved", virtual_stages=2)))
+    remat = Plan.from_genes(list(genes_with(remat="full")))
+    assert base.structural_key() == sched.structural_key()
+    assert base.structural_key() != remat.structural_key()
+    # the key covers non-gene fields too (anything reaching the lowering)
+    import dataclasses
+    named = {f[0] for f in base.structural_key()}
+    for f in dataclasses.fields(Plan):
+        if f.name == "name" or f.name in MODEL_ONLY_FIELDS:
+            assert f.name not in named
+        else:
+            assert f.name in named
+
+
+def test_structural_key_is_stable_and_hashable():
+    p = Plan.from_genes(list(genes_with(remat="block")))
+    q = Plan.from_genes(list(genes_with(remat="block")), name="other")
+    assert p.structural_key() == q.structural_key()     # name is a label
+    assert hash(p.structural_key()) == hash(q.structural_key())
+    assert sc.hash_key(p.structural_key()) == sc.hash_key(q.structural_key())
+
+
+# ------------------------------------------------------------ fake compiler
+HLO_TEXT = """\
+ENTRY %main (p0: f32[64,64], p1: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64] parameter(0)
+  %p1 = f32[64,64] parameter(1)
+  ROOT %dot.1 = f32[64,64] dot(%p0, %p1), lhs_contracting_dims={1}
+}
+"""
+
+
+class FakeCompiled:
+    """Stands in for a jax Compiled: as_text() is the expensive call."""
+
+    def __init__(self, text=HLO_TEXT):
+        self.text = text
+        self.as_text_calls = 0
+
+    def as_text(self):
+        self.as_text_calls += 1
+        return self.text
+
+
+class FakeLowered:
+    def __init__(self, counter, text=HLO_TEXT):
+        self.counter = counter
+        self.text = text
+
+    def compile(self):
+        self.counter["compiles"] += 1
+        return FakeCompiled(self.text)
+
+
+def make_counting_lower_plan(counter):
+    def lower_plan(plan):
+        counter["lowers"] += 1
+        return FakeLowered(counter)
+    return lower_plan
+
+
+def make_evaluator(cache, counter, **kw):
+    kw.setdefault("pipe_ranks", 2)
+    return sc.make_cached_batch_evaluator(
+        make_counting_lower_plan(counter), CompiledCostRunner(n_chips=1),
+        cache, key_extra=("test",), **kw)
+
+
+# ------------------------------------------------- artifact-sharing dedupe
+def test_schedule_flip_shares_artifact_remat_flip_misses():
+    counter = {"lowers": 0, "compiles": 0}
+    cache = sc.SearchCache()
+    ev_batch = make_evaluator(cache, counter)
+
+    base = genes_with(microbatches=4)
+    flip_sched = genes_with(microbatches=4, pipeline_schedule="one_f_one_b")
+    flip_virt = genes_with(microbatches=4, pipeline_schedule="interleaved",
+                           virtual_stages=2)
+    evs = ev_batch([base, flip_sched, flip_virt])
+    assert counter["compiles"] == 1                  # one artifact, 3 scores
+    assert counter["lowers"] == 1                    # deduped BEFORE tracing
+    assert [e.correct for e in evs] == [True] * 3
+    # the schedule genes still differentiate the modeled time via the bubble:
+    # gpipe idles (R-1)/(m+R-1) = 0.2, interleaved(V=2) only 1/9
+    assert evs[0].info["roofline"]["bubble_fraction"] > 0
+    assert evs[2].time_s < evs[0].time_s
+
+    evs2 = ev_batch([genes_with(remat="full")])      # structural flip
+    assert counter["compiles"] == 2
+    assert evs2[0].info["cache_hit"] is False
+    assert cache.stats.unique_compiles == 2
+    assert cache.stats.candidates == 4
+
+
+def test_ga_compiles_once_per_unique_structural_key():
+    """Acceptance: a full GA over Plan.GENE_SPACE performs at most one XLA
+    compile per unique structural key (compile counter)."""
+    counter = {"lowers": 0, "compiles": 0}
+    ev_batch = make_evaluator(sc.SearchCache(), counter)
+    cards = Plan.gene_cardinalities()
+    cfg = GAConfig(population=8, generations=4, seed=3,
+                   cardinalities=cards)
+    res = run_ga(len(cards), ev_batch.evaluate, cfg,
+                 evaluate_batch=ev_batch)
+    unique = {Plan.from_genes(list(g)).structural_key()
+              for g in res.evaluations}
+    assert counter["compiles"] == len(unique)
+    assert counter["lowers"] == len(unique)
+    assert res.best_eval.correct
+
+
+def test_warm_disk_cache_zero_compiles_same_best(tmp_path):
+    path = tmp_path / "cache.json"
+    cards = Plan.gene_cardinalities()
+    cfg = GAConfig(population=6, generations=3, seed=7,
+                   cardinalities=cards)
+
+    c1 = {"lowers": 0, "compiles": 0}
+    ev1 = make_evaluator(sc.SearchCache(path), c1)
+    res1 = run_ga(len(cards), ev1.evaluate, cfg, evaluate_batch=ev1)
+    assert c1["compiles"] > 0
+    assert path.exists()
+
+    c2 = {"lowers": 0, "compiles": 0}
+    cache2 = sc.SearchCache(path)                   # fresh process analogue
+    ev2 = make_evaluator(cache2, c2)
+    res2 = run_ga(len(cards), ev2.evaluate, cfg, evaluate_batch=ev2)
+    assert c2["compiles"] == 0                      # warm: zero fresh XLA
+    assert c2["lowers"] == 0
+    assert res2.best_genes == res1.best_genes
+    assert cache2.stats.disk_hits > 0
+    assert cache2.stats.hit_rate == 1.0
+
+
+def test_corrupted_disk_cache_falls_back_to_recompile(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{ not json !!")
+    counter = {"lowers": 0, "compiles": 0}
+    ev = make_evaluator(sc.SearchCache(path), counter)
+    evs = ev([genes_with()])
+    assert evs[0].correct and counter["compiles"] == 1
+    # the recompile repaired the file in place
+    assert sc.SearchCache(path).lookup(
+        (("test",), Plan.from_genes(list(genes_with())).structural_key())
+    ) is not None
+
+
+def test_stale_disk_entries_are_ignored(tmp_path):
+    path = tmp_path / "cache.json"
+    key = (("test",), Plan.from_genes(list(genes_with())).structural_key())
+    h = sc.hash_key(key)
+    # wrong version: whole file ignored
+    path.write_text(json.dumps({"version": -1, "entries": {
+        h: {"analysis": {"flops": 1.0, "bytes": 1.0,
+                         "collective_bytes": 0.0}, "compile_s": 0.1}}}))
+    assert sc.SearchCache(path).lookup(key) is None
+    # right version + runtime, malformed payloads: only those entries drop
+    path.write_text(json.dumps({"version": sc.CACHE_VERSION,
+                                "runtime": sc.runtime_fingerprint(),
+                                "entries": {
+        h: {"analysis": {"flops": "NaN-ish"}},
+        "other": ["not", "a", "payload"]}}))
+    cache = sc.SearchCache(path)
+    assert cache.lookup(key) is None
+    counter = {"lowers": 0, "compiles": 0}
+    evs = make_evaluator(cache, counter)([genes_with()])
+    assert evs[0].correct and counter["compiles"] == 1
+
+
+def test_disk_cache_from_other_runtime_reads_cold(tmp_path):
+    """A file written by a different jax/XLA/platform must not serve
+    stale rooflines — the whole disk layer reads as cold."""
+    path = tmp_path / "cache.json"
+    counter = {"lowers": 0, "compiles": 0}
+    make_evaluator(sc.SearchCache(path), counter)([genes_with()])
+    assert counter["compiles"] == 1
+    raw = json.loads(path.read_text())
+    assert raw["runtime"] == sc.runtime_fingerprint()
+    raw["runtime"] = "jax-0.0.0-tpu"
+    path.write_text(json.dumps(raw))
+    c2 = {"lowers": 0, "compiles": 0}
+    make_evaluator(sc.SearchCache(path), c2)([genes_with()])
+    assert c2["compiles"] == 1                   # recompiled, no stale hit
+
+
+def test_artifact_layer_is_bounded():
+    cache = sc.SearchCache(artifact_capacity=2)
+    for i in range(5):
+        cache.put_compiled(("k", i), FakeCompiled())
+    assert len(cache._compiled) == 2
+    assert cache.get_compiled(("k", 4)) is not None
+    assert cache.get_compiled(("k", 0)) is None  # evicted FIFO
+
+
+def test_compile_failure_is_memoized_not_cached_to_disk(tmp_path):
+    path = tmp_path / "cache.json"
+    cache = sc.SearchCache(path)
+    calls = {"n": 0}
+
+    def broken_lower_plan(plan):
+        calls["n"] += 1
+        raise RuntimeError("lowering exploded")
+
+    ev = sc.make_cached_batch_evaluator(
+        broken_lower_plan, CompiledCostRunner(n_chips=1), cache,
+        key_extra=("test",))
+    evs = ev([genes_with(), genes_with(pipeline_schedule="one_f_one_b")])
+    assert calls["n"] == 1                       # one failure per key
+    assert all(not e.correct for e in evs)
+    assert "lowering exploded" in evs[0].info["error"]
+    # same generation again: served from the failure memo, no retry storm
+    ev([genes_with()])
+    assert calls["n"] == 1
+    # the disk layer never persists failures
+    fresh = sc.SearchCache(path)
+    key = (("test",), Plan.from_genes(list(genes_with())).structural_key())
+    assert fresh.lookup(key) is None
+
+
+# ------------------------------------------------------ analysis memoization
+def test_analyze_compiled_memoizes_per_artifact():
+    c = FakeCompiled()
+    a1 = sc.analyze_compiled(c)
+    a2 = sc.analyze_compiled(c)
+    assert c.as_text_calls == 1
+    assert a1 is a2
+    assert a1["flops"] == pytest.approx(2.0 * 64 * 64 * 64)
+    other = FakeCompiled()
+    sc.analyze_compiled(other)
+    assert other.as_text_calls == 1
+
+
+def test_score_compiled_parses_hlo_once_across_rescoring():
+    runner = CompiledCostRunner(n_chips=1)
+    c = FakeCompiled()
+    e1 = runner.score_compiled(c, bubble_fraction=0.0)
+    e2 = runner.score_compiled(c, bubble_fraction=0.5)   # re-score: free
+    assert c.as_text_calls == 1
+    assert e1.correct and e2.correct
+    assert e2.time_s == pytest.approx(e1.time_s * 2.0)
+
+
+def test_score_analysis_matches_score_compiled():
+    runner = CompiledCostRunner(n_chips=1)
+    c = FakeCompiled()
+    via_compiled = runner.score_compiled(c, 0.25, bubble_fraction=0.25)
+    via_analysis = runner.score_analysis(sc.analyze_compiled(c), 0.25,
+                                         bubble_fraction=0.25)
+    assert via_analysis.time_s == pytest.approx(via_compiled.time_s)
+    assert via_analysis.info["roofline"] == via_compiled.info["roofline"]
+
+
+# ------------------------------------------------------------ key plumbing
+def test_hash_key_stable_across_processes_and_orderings():
+    k1 = (("a", 1), {"x": 1, "y": 2})
+    k2 = (("a", 1), {"y": 2, "x": 1})       # dict order must not matter
+    assert sc.hash_key(k1) == sc.hash_key(k2)
+    assert sc.hash_key(k1) != sc.hash_key((("a", 2), {"x": 1, "y": 2}))
+
+
+def test_loop_ga_reuses_identical_choice_measurements():
+    """Paper-side structural dedupe: gene strings that build the same
+    offload pattern (nest without the destination impl) measure once."""
+    from repro.backends.builtin import MANY_CORE
+    from repro.core.ga import Evaluation
+    from repro.core.loop_offload import ga_search
+
+    class Nest:
+        def __init__(self, name, impls):
+            self.name = name
+            self.impls = impls
+
+    class App:
+        name = "dedupe-app"
+        nests = [Nest("a", {"dp": None, "seq": None}),
+                 Nest("b", {"seq": None})]        # no dp impl -> "seq"
+
+        def build(self, choice):
+            return dict(choice)
+
+    class CountingRunner:
+        def __init__(self):
+            self.calls = []
+
+        def measure(self, fn, inputs, ref_out):
+            self.calls.append(fn)
+            return Evaluation(time_s=1.0 + 0.1 * len(self.calls),
+                              correct=True)
+
+    runner = CountingRunner()
+    res = ga_search(App(), MANY_CORE, runner, inputs=None, ref_out=None,
+                    ga_cfg=GAConfig(population=4, generations=4, seed=0))
+    # 2 binary genes -> 4 gene strings but only 2 distinct patterns
+    assert res.cache_stats["measured"] == len(runner.calls)
+    assert res.cache_stats["measured"] <= 2
+    assert res.cache_stats["reused"] >= 1
+    assert res.n_measurements >= res.cache_stats["measured"]
