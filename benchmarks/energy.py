@@ -1,0 +1,129 @@
+"""Energy benchmark: power-aware vs host-time destination selection.
+
+For each paper app the planner runs the full verification pipeline once,
+then both objectives are applied to the *same* records (selection is pure
+ranking, so no re-search is needed):
+
+  * ``host_time`` — the paper's fastest-correct rule;
+  * ``power``     — lowest modeled joules per step (repro.power: each
+    record is charged its backend envelope x roofline utilization, or
+    envelope x host time when only a host measurement exists);
+  * ``power_slowdown`` — the power follow-up's headline evaluation: lowest
+    energy among destinations within MAX_SLOWDOWN of the fastest.
+
+Emits ``BENCH_energy.json`` (a CI artifact next to BENCH_search.json) and
+exits 1 if the power policy ever selects an incorrect record, or if any
+correct finite record is missing its energy charge — the invariant the CI
+step gates on.
+
+    PYTHONPATH=src python benchmarks/energy.py [--out BENCH_energy.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+MAX_SLOWDOWN = 1.3          # the follow-up's "allowed slowdown" knob
+APPS_UNDER_TEST = ("3mm", "NAS.BT", "tdFIR")
+
+
+def _sel_row(rec):
+    if rec is None:
+        return None
+    return {
+        "destination": rec.destination,
+        "paper_analogue": rec.paper_analogue,
+        "method": rec.method,
+        "time_s": rec.best_time_s,
+        "energy_j": rec.energy_j,
+        "avg_watts": rec.avg_watts,
+        "correct": rec.correct,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_energy.json")
+    ap.add_argument("--max-slowdown", type=float, default=MAX_SLOWDOWN)
+    args = ap.parse_args()
+
+    from repro.apps import APPS
+    from repro.backends import get_policy
+    from repro.core.ga import GAConfig
+    from repro.core.measure import TimedRunner
+    from repro.core.planner import UserTarget, plan_offload
+
+    host_pol = get_policy("host-time")
+    power_pol = get_policy("power")
+    rows = {}
+    failures = []
+    for name in APPS_UNDER_TEST:
+        app = APPS[name]()
+        inputs = app.make_inputs(seed=0, small=True)
+        t0 = time.time()
+        report = plan_offload(
+            app, UserTarget(), inputs=inputs,
+            runner=TimedRunner(repeats=1),
+            ga_cfg=GAConfig.for_gene_length(min(app.gene_length, 6),
+                                            seed=0),
+            policy="power")
+        correct = [r for r in report.records
+                   if r.correct and r.best_time_s < float("inf")]
+        for r in correct:
+            if r.energy_j is None or r.avg_watts is None:
+                failures.append(f"{name}: correct record "
+                                f"{r.destination}/{r.method} has no "
+                                f"energy charge")
+        host_sel = host_pol.select(report.records)
+        power_sel = report.selected
+        slowdown_sel = power_pol.select(
+            report.records, max_slowdown=args.max_slowdown)
+        for tag, sel in (("power", power_sel),
+                         ("power_slowdown", slowdown_sel)):
+            if sel is not None and not sel.correct:
+                failures.append(f"{name}: {tag} selected an INCORRECT "
+                                f"record ({sel.destination})")
+        saving = None
+        if (host_sel is not None and power_sel is not None
+                and host_sel.energy_j and power_sel.energy_j is not None):
+            saving = (1.0 - power_sel.energy_j / host_sel.energy_j) * 100.0
+        rows[name] = {
+            "plan_elapsed_s": round(time.time() - t0, 2),
+            "ref_time_s": report.ref_time_s,
+            "host_time_choice": _sel_row(host_sel),
+            "power_choice": _sel_row(power_sel),
+            "power_within_slowdown_choice": _sel_row(slowdown_sel),
+            "max_slowdown": args.max_slowdown,
+            "energy_saving_pct_vs_host_choice": saving,
+            "records": report.summary_rows(),
+        }
+        h = rows[name]["host_time_choice"] or {}
+        p = rows[name]["power_choice"] or {}
+        saving_tag = "n/a" if saving is None else f"{saving:.1f}%"
+        print(f"energy/{name}: host-time -> {h.get('paper_analogue')} "
+              f"({(h.get('energy_j') or 0):.2f} J) | power -> "
+              f"{p.get('paper_analogue')} ({(p.get('energy_j') or 0):.2f} J)"
+              f" | saving {saving_tag}")
+
+    out = {
+        "bench": "energy",
+        "max_slowdown": args.max_slowdown,
+        "apps": rows,
+        "failures": failures,
+    }
+    Path(args.out).write_text(json.dumps(out, indent=1))
+    print(f"wrote {args.out}")
+    if failures:
+        print("FAIL:", *failures, sep="\n  ")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

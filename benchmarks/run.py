@@ -229,7 +229,8 @@ def main() -> None:
     ap.add_argument("--policy", default="host-time",
                     help="destination-selection policy for the fig. 3 "
                          "table (repro.backends.policy): host-time | "
-                         "modeled | price-weighted | power")
+                         "modeled | price-weighted | power (modeled "
+                         "joules, repro.power) | edp")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     table_kernels()

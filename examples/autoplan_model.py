@@ -33,9 +33,11 @@ def main():
     ap.add_argument("--policy", default="modeled",
                     help="plan-selection policy (repro.backends.policy): "
                          "modeled / host-time rank pure modeled step time; "
-                         "price-weighted / power also weight each plan's "
-                         "per-device memory traffic (a machine-size / "
-                         "power-envelope proxy)")
+                         "price-weighted weights each plan's per-device "
+                         "memory traffic (a machine-size proxy); power / "
+                         "edp rank the modeled joules per step of each "
+                         "candidate's roofline under the mesh's TPU chip "
+                         "envelope (repro.power)")
     args = ap.parse_args()
 
     from pathlib import Path
@@ -113,8 +115,12 @@ def main():
 
     # policy selection over every compiled candidate: price is proxied by
     # the plan's per-device memory traffic (relative to the leanest
-    # candidate), so price-weighted / power prefer memory-lean plans when
-    # their modeled step time is close
+    # candidate), so price-weighted prefers memory-lean plans when modeled
+    # step time is close; power / edp rerank the GA front by the modeled
+    # energy of each candidate's roofline (utilization x the mesh slice's
+    # TPU chip envelope — a comm/bubble-heavy plan burns idle watts over a
+    # longer step and loses even when its host ranking was close)
+    from repro.power import cell_energy
     valid_bytes = [x.info["roofline"]["bytes_per_device"]
                    for x in res.evaluations.values()
                    if x.correct and "roofline" in x.info]
@@ -123,8 +129,13 @@ def main():
     def price_proxy(e):
         return e.info["roofline"]["bytes_per_device"] / base_bytes
 
-    scored = [(pol.score_parts(e.time_s, price=price_proxy(e),
-                               modeled_s=e.time_s), genes, e)
+    def cand_score(e):
+        e_rep = cell_energy(e.info["roofline"], mesh.size)
+        return pol.score_cell(
+            e.time_s, price=price_proxy(e),
+            energy=e_rep.to_dict() if e_rep is not None else None)
+
+    scored = [(cand_score(e), genes, e)
               for genes, e in res.evaluations.items()
               if e.correct and "roofline" in e.info]
     if scored:
@@ -132,8 +143,13 @@ def main():
     else:
         best_genes, best_eval = res.best_genes, res.best_eval
     best = Plan.from_genes(list(best_genes))
+    best_energy = ("roofline" in best_eval.info
+                   and cell_energy(best_eval.info["roofline"], mesh.size))
+    e_tag = (f", {best_energy.energy_j:.1f} J/step "
+             f"@ {best_energy.avg_watts:.0f} W" if best_energy else "")
     print(f"\nbest plan for {args.arch} under policy={pol.name} "
-          f"(modeled step {best_eval.time_s*1e6:.1f} us on {mesh.shape}):")
+          f"(modeled step {best_eval.time_s*1e6:.1f} us{e_tag} "
+          f"on {mesh.shape}):")
     for gene in Plan.GENE_SPACE:
         tag = "" if gene.structural else "   [model-only]"
         print(f"  {gene.field:22s} = {getattr(best, gene.field)}{tag}")

@@ -31,7 +31,9 @@ def main():
                          "(repro.backends.policy): host-time (paper's "
                          "fastest-correct rule) | modeled (rank by "
                          "mesh-verified roofline when recorded) | "
-                         "price-weighted | power")
+                         "price-weighted | power (modeled joules per "
+                         "step, repro.power) | edp (energy-delay "
+                         "product)")
     args = ap.parse_args()
 
     target = UserTarget(target_speedup=args.target_speedup,

@@ -9,10 +9,15 @@ Public surface (stable — later PRs build on this):
     ``verification_order()`` derives the paper's six-verification order from
     declared ``verify_time`` / ``methods``.
   * :mod:`repro.backends.builtin`  — the three built-in backends
-    (``MANY_CORE``, ``GPU``, ``FPGA``) and ``DEFAULT_REGISTRY``.
+    (``MANY_CORE``, ``GPU``, ``FPGA``, each carrying its repro.power
+    envelope), ``DEFAULT_REGISTRY``, plus the function-blocks-only
+    ``GPU_LIBRARY`` example backend (arXiv 2004.09883) and
+    ``registry_with_library_backend()``.
   * :mod:`repro.backends.policy`   — :class:`SelectionPolicy` and the
     built-in objectives (``host-time``, ``modeled``, ``price-weighted``,
-    ``power``); ``get_policy`` / ``register_policy``.
+    ``power`` — modeled joules via repro.power — and ``edp``), the
+    ``power_budget_w`` / ``max_slowdown`` selection constraints;
+    ``get_policy`` / ``register_policy``.
 
 ``repro.core.destinations`` remains a thin compatibility shim over this
 package (``ALL`` / ``VERIFICATION_ORDER`` / ``Destination``).
@@ -21,10 +26,11 @@ from repro.backends.base import (Backend, SearchContext, SearchResult,
                                  METHOD_FUNCTION_BLOCK, METHOD_LOOP,
                                  METHOD_ORDER)
 from repro.backends.registry import BackendRegistry
-from repro.backends.builtin import (DEFAULT_REGISTRY, FPGA, GPU, MANY_CORE,
-                                    default_registry)
+from repro.backends.builtin import (DEFAULT_REGISTRY, FPGA, GPU, GPU_LIBRARY,
+                                    MANY_CORE, default_registry,
+                                    registry_with_library_backend)
 from repro.backends.policy import (DEFAULT_POLICY, POLICIES, SelectionPolicy,
-                                   HostTimePolicy, ModeledPolicy,
+                                   EdpPolicy, HostTimePolicy, ModeledPolicy,
                                    PowerPolicy, PriceWeightedPolicy,
                                    get_policy, register_policy)
 
@@ -32,8 +38,9 @@ __all__ = [
     "Backend", "SearchContext", "SearchResult",
     "METHOD_FUNCTION_BLOCK", "METHOD_LOOP", "METHOD_ORDER",
     "BackendRegistry", "DEFAULT_REGISTRY", "default_registry",
-    "MANY_CORE", "GPU", "FPGA",
+    "MANY_CORE", "GPU", "FPGA", "GPU_LIBRARY",
+    "registry_with_library_backend",
     "SelectionPolicy", "HostTimePolicy", "ModeledPolicy",
-    "PriceWeightedPolicy", "PowerPolicy",
+    "PriceWeightedPolicy", "PowerPolicy", "EdpPolicy",
     "POLICIES", "DEFAULT_POLICY", "get_policy", "register_policy",
 ]

@@ -119,6 +119,11 @@ class Backend:
     # compile data-parallel, "model" tensor-parallel, "" has no mesh bridge
     # (the FPGA analogue is a kernel substitution, not a sharding).
     mesh_role: str = ""
+    # power envelope (repro.power.PowerEnvelope) the planner charges this
+    # destination's energy against; None resolves through
+    # repro.power.envelope_for (built-in calibration by paper_analogue,
+    # generic fallback)
+    power: Optional[Any] = None
     # which verification methods this backend participates in
     methods: Tuple[str, ...] = METHOD_ORDER
     # strategies; (backend, app, ctx) -> SearchResult.  fb_search_fn defaults

@@ -5,12 +5,24 @@ Price ordering follows the paper ("the central price range is the ascending
 order of GPU, many core CPU and FPGA") and verification-time ordering too
 ("many core CPU, GPU and FPGA"); both are declared per backend and consumed
 by the registry's derived order + the planner's early-stop logic, not their
-absolute values.
+absolute values.  Each backend also declares its power envelope
+(repro.power): the planner charges every correct record's energy against
+it, so the ``power`` / ``edp`` selection policies rank real modeled joules.
+
+``GPU_LIBRARY`` is the function-blocks-only destination of Yamato's
+"offloading to GPU libraries" follow-up (arXiv 2004.09883): offload
+discovery happens purely by library/function-block matching, there is no
+loop GA, so it declares ``methods=("function_block",)`` and the registry
+slots it into the FB phase only.  It is not in ``DEFAULT_REGISTRY`` (the
+paper's environment has three destinations); ``registry_with_library_
+backend()`` is the example registration.
 """
 from __future__ import annotations
 
-from repro.backends.base import Backend, SearchContext, SearchResult
+from repro.backends.base import (Backend, METHOD_FUNCTION_BLOCK,
+                                 SearchContext, SearchResult)
 from repro.backends.registry import BackendRegistry
+from repro.power import envelope as power_envelope
 
 
 def ga_loop_search(backend: Backend, app, ctx: SearchContext) -> SearchResult:
@@ -35,17 +47,39 @@ def intensity_loop_search(backend: Backend, app,
 MANY_CORE = Backend(key="dp", name="xla_dp",
                     paper_analogue="many-core CPU",
                     price=1.2, verify_time=1.0, mesh_role="data",
+                    power=power_envelope.MANY_CORE_XEON,
                     search_fn=ga_loop_search)
 GPU = Backend(key="tp", name="sharded_tp", paper_analogue="GPU",
               price=1.0, verify_time=1.5, mesh_role="model",
+              power=power_envelope.GPU_T4,
               search_fn=ga_loop_search)
 FPGA = Backend(key="pallas", name="pallas_kernel",
                paper_analogue="FPGA",
                price=2.0, verify_time=10.0,
+               power=power_envelope.FPGA_A10,
                search_fn=intensity_loop_search)
 
 DEFAULT_REGISTRY = BackendRegistry([MANY_CORE, GPU, FPGA])
 
+# Function-blocks-only destination (arXiv 2004.09883): no loop GA — the
+# verification IS the library match, so verify_time sits below the GPU loop
+# analogue's.  search_fn stays None: the registry never schedules it for a
+# loop verification, and Backend.search raises if someone forces one.
+GPU_LIBRARY = Backend(key="fb_gpu_lib", name="gpu_fb_library",
+                      paper_analogue="GPU library",
+                      price=1.0, verify_time=1.2,
+                      methods=(METHOD_FUNCTION_BLOCK,),
+                      power=power_envelope.GPU_T4)
+
 
 def default_registry() -> BackendRegistry:
     return DEFAULT_REGISTRY
+
+
+def registry_with_library_backend() -> BackendRegistry:
+    """Example registration: the paper's three destinations plus the
+    function-blocks-only GPU library backend (a fourth FB verification and
+    no new loop verification — see tests/test_power.py)."""
+    reg = DEFAULT_REGISTRY.copy()
+    reg.register(GPU_LIBRARY)
+    return reg

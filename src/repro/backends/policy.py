@@ -12,9 +12,21 @@ awareness — so the objective is a pluggable :class:`SelectionPolicy`:
     destinations without a mesh analogue.
   * ``price-weighted``  — min ``best_time_s × price``: throughput per
     relative dollar, using the paper's price ordering.
-  * ``power``           — stub for the power-objective follow-up: energy is
-    proxied as ``price × time`` (device price tracks its power envelope),
-    preferring the modeled time when present.
+  * ``power``           — min modeled joules per step (repro.power): the
+    planner charges every correct record's energy against its backend's
+    power envelope — roofline-utilization watts when a ``cost_runner``
+    recorded a mesh roofline, envelope × host-time otherwise — and this
+    policy ranks ``VerificationRecord.energy_j``.
+  * ``edp``             — min energy-delay product (``energy_j × time``):
+    the compromise objective when pure joules would tolerate an arbitrary
+    slowdown.
+
+Selection constraints compose with any policy (``SelectionPolicy.select``):
+``power_budget_w`` drops records whose modeled average draw exceeds the
+budget (the follow-up's "within allowed power" mode), ``max_slowdown``
+drops records slower than the fastest correct one by more than the factor
+(its "power saving within allowed slowdown" evaluation:
+``plan_offload(policy="power", max_slowdown=1.3)``).
 
 Every policy ranks only *correct, finite* records — a penalized wrong
 result can never be the chosen destination, whatever the objective.
@@ -31,20 +43,49 @@ class SelectionPolicy:
 
     def score_parts(self, time_s: float, price: float = 1.0,
                     modeled_s: Optional[float] = None) -> float:
-        """Ranking key from raw parts (also used by repro.launch.dryrun to
-        rank mesh cells, where ``price`` is the chip count)."""
+        """Ranking key from raw parts.  Mesh cells are ranked through
+        :meth:`score_cell` (repro.launch.dryrun, where ``price`` is the
+        chip count), whose default delegates here; the energy policies
+        override ``score_cell`` to consume the cell's modeled joules."""
         raise NotImplementedError
 
     def score(self, record) -> float:
         """Ranking key for a planner VerificationRecord (duck-typed:
-        ``best_time_s`` / ``price`` / ``mesh_time_s``)."""
+        ``best_time_s`` / ``price`` / ``mesh_time_s`` / ``energy_j``)."""
         return self.score_parts(record.best_time_s, record.price,
                                 getattr(record, "mesh_time_s", None))
 
-    def select(self, records: List):
-        """The winning record, or None when nothing is correct + finite."""
+    def score_cell(self, step_time_s: float, price: float = 1.0,
+                   energy: Optional[Dict] = None) -> float:
+        """Ranking key for one compiled artifact (a dryrun mesh cell or an
+        autoplan GA candidate): modeled step time, relative price (chip
+        count / memory-traffic proxy) and, when modeled, the cell's
+        ``EnergyReport.to_dict()``."""
+        return self.score_parts(step_time_s, price=price,
+                                modeled_s=step_time_s)
+
+    def select(self, records: List, *,
+               power_budget_w: Optional[float] = None,
+               max_slowdown: Optional[float] = None):
+        """The winning record, or None when nothing is correct + finite
+        (or nothing satisfies the constraints).
+
+        ``power_budget_w`` keeps only records whose modeled ``avg_watts``
+        fits the budget (records without a modeled draw are over budget by
+        definition — an unknown draw cannot prove it fits).
+        ``max_slowdown`` keeps only records within the factor of the
+        fastest surviving correct record's host time.
+        """
         done = [r for r in records
                 if r.correct and r.best_time_s < float("inf")]
+        if power_budget_w is not None:
+            done = [r for r in done
+                    if getattr(r, "avg_watts", None) is not None
+                    and r.avg_watts <= power_budget_w]
+        if max_slowdown is not None and done:
+            fastest = min(r.best_time_s for r in done)
+            done = [r for r in done
+                    if r.best_time_s <= max_slowdown * fastest]
         return min(done, key=self.score) if done else None
 
 
@@ -70,11 +111,69 @@ class PriceWeightedPolicy(SelectionPolicy):
 
 
 class PowerPolicy(SelectionPolicy):
+    """Rank by modeled joules per step (repro.power.EnergyModel)."""
+
     name = "power"
 
+    @staticmethod
+    def _fallback_joules(record) -> float:
+        """Joule-scale charge for a record nothing charged (not produced by
+        this build's plan_offload): the generic envelope at peak over the
+        modeled-or-host time.  Keeping the unit in joules matters — a
+        seconds-scale proxy would let every *unknown* draw outrank every
+        modeled one in a mixed record set."""
+        from repro.power import GENERIC
+        t = getattr(record, "mesh_time_s", None)
+        if t is None:
+            t = record.best_time_s
+        return GENERIC.peak_w * t
+
+    def score(self, record):
+        e = getattr(record, "energy_j", None)
+        return e if e is not None else self._fallback_joules(record)
+
     def score_parts(self, time_s, price=1.0, modeled_s=None):
+        # joule-scale like every other path of this policy: generic peak
+        # draw, scaled by the relative price as a machine-size stand-in
+        from repro.power import GENERIC
         t = modeled_s if modeled_s is not None else time_s
-        return t * price
+        return GENERIC.peak_w * t * price
+
+    def score_cell(self, step_time_s, price=1.0, energy=None):
+        if energy is not None:
+            return energy["energy_j"]
+        # same unit rule as _fallback_joules, scaled by the cell's price
+        # (chip count): an unmodelled big slice must not under-score a
+        # modeled one
+        from repro.power import GENERIC
+        return GENERIC.peak_w * step_time_s * price
+
+
+class EdpPolicy(SelectionPolicy):
+    """Rank by the energy-delay product (joules × seconds per step)."""
+
+    name = "edp"
+
+    def _delay(self, record):
+        m = getattr(record, "mesh_time_s", None)
+        return m if m is not None else record.best_time_s
+
+    def score(self, record):
+        e = getattr(record, "energy_j", None)
+        if e is None:
+            e = PowerPolicy._fallback_joules(record)
+        return e * self._delay(record)
+
+    def score_parts(self, time_s, price=1.0, modeled_s=None):
+        from repro.power import GENERIC
+        t = modeled_s if modeled_s is not None else time_s
+        return GENERIC.peak_w * t * t * price
+
+    def score_cell(self, step_time_s, price=1.0, energy=None):
+        if energy is not None:
+            return energy["edp"]
+        from repro.power import GENERIC
+        return GENERIC.peak_w * step_time_s * step_time_s * price
 
 
 POLICIES: Dict[str, SelectionPolicy] = {}
@@ -86,7 +185,7 @@ def register_policy(policy: SelectionPolicy) -> SelectionPolicy:
 
 
 for _p in (HostTimePolicy(), ModeledPolicy(), PriceWeightedPolicy(),
-           PowerPolicy()):
+           PowerPolicy(), EdpPolicy()):
     register_policy(_p)
 
 DEFAULT_POLICY = "host-time"

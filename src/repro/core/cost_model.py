@@ -94,6 +94,11 @@ class Roofline:
     roofline_fraction: float = 0.0    # useful compute time / step time
     bubble_fraction: float = 0.0      # pipeline-schedule idle fraction
     pipeline_s: float = 0.0           # extra step time the bubble costs
+    # utilization terms (each roofline term / step time, so bubbles shrink
+    # them) — the inputs repro.power.EnergyModel turns into watts
+    compute_util: float = 0.0
+    memory_util: float = 0.0
+    collective_util: float = 0.0
 
     def to_dict(self):
         return asdict(self)
@@ -128,6 +133,9 @@ def roofline_terms(flops: float, bytes_accessed: float,
         roofline_fraction=(useful_time / step) if step else 0.0,
         bubble_fraction=bubble,
         pipeline_s=step - busy,
+        compute_util=(compute_s / step) if step else 0.0,
+        memory_util=(memory_s / step) if step else 0.0,
+        collective_util=(collective_s / step) if step else 0.0,
     )
 
 

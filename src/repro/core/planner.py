@@ -17,8 +17,13 @@ keeps:
 Final selection is a pluggable :class:`~repro.backends.SelectionPolicy`
 (``policy=``): ``host-time`` reproduces the paper's fastest-correct-pattern
 rule; ``modeled`` ranks by the mesh-verified roofline time when a
-``cost_runner`` recorded one; ``price-weighted`` / ``power`` weight by the
-destination's relative price.
+``cost_runner`` recorded one; ``price-weighted`` weights by the
+destination's relative price; ``power`` / ``edp`` rank by the modeled
+energy the planner charges each correct record (repro.power: roofline
+utilization × the backend's power envelope, envelope × host-time as
+fallback).  ``power_budget_w`` / ``max_slowdown`` constrain any policy's
+selection — the power follow-up's "fastest within the power budget" and
+"lowest energy within the allowed slowdown" evaluations.
 """
 from __future__ import annotations
 
@@ -77,6 +82,12 @@ class VerificationRecord:
     # verification-cost counters from the search (e.g. the loop GA's
     # choice-keyed measurement memo: measured / reused)
     cache_stats: Dict = field(default_factory=dict)
+    # modeled energy of this destination's step (repro.power): charged from
+    # the mesh roofline when one was recorded, envelope × host-time
+    # otherwise; None on incorrect / infinite records
+    energy_j: Optional[float] = None
+    avg_watts: Optional[float] = None
+    energy_info: Dict = field(default_factory=dict)
 
 
 @dataclass
@@ -100,6 +111,10 @@ class PlanReport:
                 "improvement": round(r.improvement, 2),
                 "price": r.price, "n_meas": r.n_measurements,
                 "correct": r.correct,
+                "energy_j": (None if r.energy_j is None
+                             else round(r.energy_j, 6)),
+                "avg_watts": (None if r.avg_watts is None
+                              else round(r.avg_watts, 3)),
                 "selected": self.selected is r,
             })
         return rows
@@ -125,7 +140,9 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                  small_state=None, inputs=None,
                  registry=None, cost_runner=None,
                  backends: Optional[BackendRegistry] = None,
-                 policy: Union[str, SelectionPolicy, None] = None
+                 policy: Union[str, SelectionPolicy, None] = None,
+                 power_budget_w: Optional[float] = None,
+                 max_slowdown: Optional[float] = None
                  ) -> PlanReport:
     """Run the registry's verifications and select a destination.
 
@@ -143,7 +160,15 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
 
     ``policy`` names the :class:`~repro.backends.SelectionPolicy` ranking
     the verified destinations (default ``host-time``, the paper's rule;
-    ``modeled`` consumes the recorded ``mesh_time_s``).
+    ``modeled`` consumes the recorded ``mesh_time_s``; ``power`` / ``edp``
+    consume the modeled ``energy_j`` this function charges every correct
+    record via repro.power).
+
+    ``power_budget_w`` restricts selection to destinations whose modeled
+    average draw fits the budget; ``max_slowdown`` restricts it to
+    destinations within the factor of the fastest correct one — so the
+    power follow-up's "power saving within allowed slowdown" evaluation is
+    ``plan_offload(policy="power", max_slowdown=1.3)``.
     """
     runner = runner or TimedRunner()
     backends = backends if backends is not None else default_registry()
@@ -217,14 +242,33 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                 rec.mesh_time_s = mesh_ev.time_s
                 rec.mesh_info = dict(mesh_ev.info)
 
+        # energy charge (repro.power): every correct finite record gets the
+        # modeled joules/watts the power/edp policies and the
+        # power_budget_w constraint consume — from the mesh roofline when
+        # the bridge recorded one, envelope × host-time otherwise
+        if rec.correct and rec.best_time_s < float("inf"):
+            from repro.power import energy_for_record, envelope_for
+            e_rep = energy_for_record(rec, envelope_for(backend))
+            if e_rep is not None:
+                rec.energy_j = e_rep.energy_j
+                rec.avg_watts = e_rep.avg_watts
+                rec.energy_info = e_rep.to_dict()
+
         if rec.met_target:
             early = True
             break
 
     # selection: delegated to the policy; every policy ranks correct
     # patterns only — a penalized wrong result is never the chosen
-    # destination (it stays in records as evidence)
-    selected = pol.select(records)
+    # destination (it stays in records as evidence).  The constraint
+    # kwargs are only passed when set: a custom policy written against the
+    # pre-constraint select(records) signature keeps working until someone
+    # actually asks it for a constrained selection.
+    if power_budget_w is not None or max_slowdown is not None:
+        selected = pol.select(records, power_budget_w=power_budget_w,
+                              max_slowdown=max_slowdown)
+    else:
+        selected = pol.select(records)
     return PlanReport(app=app.name, ref_time_s=ref_time, records=records,
                       selected=selected, early_stopped=early,
                       policy=pol.name)

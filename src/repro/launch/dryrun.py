@@ -213,14 +213,20 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         "roofline": rl.to_dict(),
         "fits_16GiB": memory["peak_estimate_bytes"] < 16 * 1024**3,
     })
+    # modeled energy of the cell (repro.power): the slice's chip envelope
+    # at the roofline's utilization — what --policy power | edp rank
+    from repro.power import cell_energy
+    e_rep = cell_energy(rl, n_chips)
+    result["energy"] = e_rep.to_dict() if e_rep is not None else None
     # selection-policy score (repro.backends.policy): the ranking key the
-    # cost policy assigns this cell — price is the chip count, so
-    # price-weighted / power rank step_time x slice size (throughput per
-    # relative dollar) while host-time / modeled rank pure step time.
+    # cost policy assigns this cell — host-time / modeled rank pure step
+    # time; price-weighted ranks step_time x chip count (throughput per
+    # relative dollar); power ranks the cell's modeled joules per step and
+    # edp its energy-delay product.
     from repro.backends import get_policy
     pol = get_policy(policy)
-    result["policy_score"] = pol.score_parts(
-        rl.step_time_s, price=float(n_chips), modeled_s=rl.step_time_s)
+    result["policy_score"] = pol.score_cell(
+        rl.step_time_s, price=float(n_chips), energy=result["energy"])
     return result
 
 
@@ -251,10 +257,13 @@ def main():
     ap.add_argument("--policy", default="host-time",
                     help="selection policy ranking the compiled cells "
                          "(repro.backends.policy): host-time | modeled "
-                         "rank pure modeled step time; price-weighted | "
-                         "power rank step_time x chip count (throughput "
-                         "per relative dollar). With --all, the best mesh "
-                         "per (arch, shape) under the policy is printed.")
+                         "rank pure modeled step time; price-weighted "
+                         "ranks step_time x chip count; power ranks the "
+                         "cell's modeled joules per step (repro.power: "
+                         "TPU chip envelope x roofline utilization) and "
+                         "edp its energy-delay product. With --all, the "
+                         "best mesh per (arch, shape) under the policy "
+                         "is printed.")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--no-search-cache", action="store_true",
@@ -330,9 +339,13 @@ def main():
                     else:
                         ok += 1
                         rl = res["roofline"]
+                        e = res.get("energy") or {}
+                        e_tag = (f" energy={e['energy_j']:.1f}J"
+                                 f"@{e['avg_watts']:.0f}W" if e else "")
                         print(f"  ok compile={res['compile_s']}s "
                               f"dominant={rl['dominant']} "
-                              f"step={rl['step_time_s']:.4f}s", flush=True)
+                              f"step={rl['step_time_s']:.4f}s{e_tag}",
+                              flush=True)
             except subprocess.TimeoutExpired:
                 path.write_text(json.dumps(
                     {"arch": arch, "shape": shape, "mesh": mesh_kind,
@@ -351,19 +364,30 @@ def main():
             r = json.loads(path.read_text())
             if "error" in r or "skip" in r or "roofline" not in r:
                 continue
-            score = r.get("policy_score")
-            if score is None or r.get("policy") != pol.name:
-                score = pol.score_parts(r["roofline"]["step_time_s"],
-                                        price=float(r["n_chips"]),
-                                        modeled_s=r["roofline"]["step_time_s"])
+            # always rescore from the stored roofline: a cell JSON written
+            # by an older build may carry a policy_score in different
+            # units (or no energy block at all), and min() must compare
+            # one unit across cells — recompute the energy when absent
+            energy = r.get("energy")
+            if energy is None and "roofline" in r:
+                from repro.power import cell_energy
+                e_rep = cell_energy(r["roofline"], r["n_chips"])
+                energy = e_rep.to_dict() if e_rep is not None else None
+                r["energy"] = energy
+            score = pol.score_cell(r["roofline"]["step_time_s"],
+                                   price=float(r["n_chips"]),
+                                   energy=energy)
             by_cell.setdefault((arch, shape), []).append((score, mesh_kind, r))
         for (arch, shape), cells in sorted(by_cell.items()):
             if len(cells) < 2:
                 continue
             score, mesh_kind, r = min(cells, key=lambda c: c[0])
+            e = r.get("energy") or {}
+            e_tag = (f", {e['energy_j']:.1f} J/step "
+                     f"@ {e['avg_watts']:.0f} W" if e else "")
             print(f"[policy={pol.name}] {arch} x {shape}: {mesh_kind} "
                   f"({r['n_chips']} chips, "
-                  f"step={r['roofline']['step_time_s']:.4f}s, "
+                  f"step={r['roofline']['step_time_s']:.4f}s{e_tag}, "
                   f"score={score:.4f})")
         print(f"[dryrun] done: {ok} ok, {skip} skip, {fail} fail")
         sys.exit(1 if fail else 0)
@@ -385,7 +409,7 @@ def main():
     print(json.dumps({k: v for k, v in res.items()
                       if k in ("arch", "shape", "mesh", "compile_s",
                                "verify_s", "cache_hit", "roofline",
-                               "fits_16GiB", "skip")}, indent=1))
+                               "energy", "fits_16GiB", "skip")}, indent=1))
 
 
 if __name__ == "__main__":

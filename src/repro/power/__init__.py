@@ -1,0 +1,35 @@
+"""repro.power — real energy model + power-aware offload selection.
+
+Yamato's follow-up to the source paper ("Power Saving Evaluation with
+Automatic Offloading", arXiv 2110.11520) keeps the verification pipeline
+and swaps the objective: pick the destination with the best performance
+per watt, optionally under an allowed slowdown.  This package supplies the
+physics for that objective; :mod:`repro.backends.policy` supplies the
+ranking (``power`` / ``edp`` policies plus the ``power_budget_w`` /
+``max_slowdown`` selection constraints).
+
+Public surface (stable — later PRs build on this):
+
+  * :class:`PowerEnvelope` — idle/peak watts + memory-power fraction of one
+    destination; built-ins :data:`MANY_CORE_XEON`, :data:`GPU_T4`,
+    :data:`FPGA_A10`, :data:`TPU_V5E_CHIP`, :data:`GENERIC`;
+    ``envelope_for(backend)`` resolves ``Backend.power`` -> built-in
+    calibration -> generic.
+  * :class:`EnergyModel` — roofline utilization x envelope -> watts;
+    ``from_roofline`` (modeled path) / ``from_time`` (envelope x host-time
+    fallback).
+  * :class:`EnergyReport` — ``energy_j`` / ``avg_watts`` / ``edp`` /
+    ``perf_per_watt`` per step.
+  * :func:`energy_for_record` — the planner's per-record charge rule.
+"""
+from repro.power.envelope import (BY_ANALOGUE, FPGA_A10, GENERIC, GPU_T4,
+                                  MANY_CORE_XEON, TPU_V5E_CHIP,
+                                  PowerEnvelope, envelope_for)
+from repro.power.model import (EnergyModel, EnergyReport, cell_energy,
+                               energy_for_record)
+
+__all__ = [
+    "PowerEnvelope", "EnergyModel", "EnergyReport",
+    "MANY_CORE_XEON", "GPU_T4", "FPGA_A10", "TPU_V5E_CHIP", "GENERIC",
+    "BY_ANALOGUE", "envelope_for", "energy_for_record", "cell_energy",
+]

@@ -1,0 +1,91 @@
+"""Per-destination power envelopes (arXiv 2110.11520's measured machines).
+
+A :class:`PowerEnvelope` is the static electrical identity of one offload
+destination: what it draws doing nothing (``idle_w``), what it draws flat
+out (``peak_w``), and how much of the active draw belongs to the memory
+system rather than the compute units (``memory_w_fraction``).  The energy
+model (:mod:`repro.power.model`) interpolates between idle and peak with
+the roofline's utilization terms, so a comm-bound destination that idles
+its ALUs is charged idle-heavy watts over a long step — usually *more*
+joules than a busy fast one.
+
+Calibration contract (see ROADMAP "repro.power"): the built-in numbers are
+vendor TDP / idle figures for the evaluation hardware of Yamato's power
+follow-up (Xeon E5-2660 v4 many-core, Tesla T4 GPU, Intel PAC Arria 10
+FPGA) plus a TPU v5e chip envelope for mesh cells.  Only their *relative*
+shape matters for selection; override per backend with
+``Backend.with_(power=PowerEnvelope(...))`` or per call by passing an
+envelope to :class:`~repro.power.model.EnergyModel`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class PowerEnvelope:
+    """Idle/peak draw (+ memory share of the active draw) of one device."""
+    name: str
+    idle_w: float
+    peak_w: float
+    # fraction of the active (peak - idle) draw attributable to the memory
+    # system; the rest follows compute utilization
+    memory_w_fraction: float = 0.3
+
+    def __post_init__(self):
+        if self.idle_w < 0 or self.peak_w <= 0:
+            raise ValueError(f"non-physical envelope {self.name!r}: "
+                             f"idle={self.idle_w}, peak={self.peak_w}")
+        if self.peak_w < self.idle_w:
+            raise ValueError(f"envelope {self.name!r}: peak_w {self.peak_w} "
+                             f"< idle_w {self.idle_w}")
+        if not 0.0 <= self.memory_w_fraction <= 1.0:
+            raise ValueError(f"envelope {self.name!r}: memory_w_fraction "
+                             f"must be in [0, 1]")
+
+    @property
+    def active_w(self) -> float:
+        return self.peak_w - self.idle_w
+
+    def scaled(self, n: float, name: Optional[str] = None) -> "PowerEnvelope":
+        """The envelope of ``n`` such devices (a mesh slice draws n chips)."""
+        if n <= 0:
+            raise ValueError(f"cannot scale envelope by n={n}")
+        return replace(self, name=name or f"{self.name}x{n:g}",
+                       idle_w=self.idle_w * n, peak_w=self.peak_w * n)
+
+
+# Built-in calibration (vendor TDP/idle for the power follow-up's machines).
+MANY_CORE_XEON = PowerEnvelope("xeon-e5-2660v4", idle_w=55.0, peak_w=105.0,
+                               memory_w_fraction=0.35)
+GPU_T4 = PowerEnvelope("tesla-t4", idle_w=10.0, peak_w=70.0,
+                       memory_w_fraction=0.25)
+FPGA_A10 = PowerEnvelope("intel-pac-arria10", idle_w=25.0, peak_w=66.0,
+                         memory_w_fraction=0.20)
+# per-chip envelope for compiled mesh cells (repro.launch.dryrun); scaled
+# by the cell's chip count
+TPU_V5E_CHIP = PowerEnvelope("tpu-v5e-chip", idle_w=60.0, peak_w=200.0,
+                             memory_w_fraction=0.30)
+# last-resort envelope for destinations that declare nothing
+GENERIC = PowerEnvelope("generic-accelerator", idle_w=50.0, peak_w=150.0,
+                        memory_w_fraction=0.30)
+
+# paper_analogue -> envelope for the built-in destinations (kept here so
+# repro.backends can stay import-light; Backend.power overrides this)
+BY_ANALOGUE = {
+    "many-core CPU": MANY_CORE_XEON,
+    "GPU": GPU_T4,
+    "GPU library": GPU_T4,
+    "FPGA": FPGA_A10,
+}
+
+
+def envelope_for(backend) -> PowerEnvelope:
+    """The envelope the planner charges a backend's records against:
+    the backend's declared ``power``, else the built-in calibration for its
+    paper analogue, else :data:`GENERIC`."""
+    declared = getattr(backend, "power", None)
+    if declared is not None:
+        return declared
+    return BY_ANALOGUE.get(getattr(backend, "paper_analogue", ""), GENERIC)

@@ -138,14 +138,22 @@ def test_policy_lookup_and_unknown_policy():
 
 
 def test_policy_scores():
+    from repro.power import GENERIC
     host, modeled = get_policy("host-time"), get_policy("modeled")
     price, power = get_policy("price-weighted"), get_policy("power")
     assert host.score_parts(2.0, price=3.0, modeled_s=0.5) == 2.0
     assert modeled.score_parts(2.0, price=3.0, modeled_s=0.5) == 0.5
     assert modeled.score_parts(2.0, price=3.0, modeled_s=None) == 2.0
     assert price.score_parts(2.0, price=3.0, modeled_s=0.5) == 6.0
-    assert power.score_parts(2.0, price=3.0, modeled_s=0.5) == 1.5
-    assert power.score_parts(2.0, price=3.0, modeled_s=None) == 6.0
+    # the energy policies keep every path joule-scale (generic peak draw
+    # x modeled-or-host time x relative price)
+    assert power.score_parts(2.0, price=3.0, modeled_s=0.5) == \
+        GENERIC.peak_w * 0.5 * 3.0
+    assert power.score_parts(2.0, price=3.0, modeled_s=None) == \
+        GENERIC.peak_w * 2.0 * 3.0
+    edp = get_policy("edp")
+    assert edp.score_parts(2.0, price=3.0, modeled_s=0.5) == \
+        GENERIC.peak_w * 0.25 * 3.0
 
 
 def test_modeled_policy_flips_selection_on_comm_bound_candidate():

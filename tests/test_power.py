@@ -1,0 +1,429 @@
+"""repro.power: energy model, power-aware selection policies, selection
+constraints, and the function-blocks-only library backend."""
+import jax.numpy as jnp
+import pytest
+
+from repro.backends import (Backend, BackendRegistry, DEFAULT_REGISTRY,
+                            GPU_LIBRARY, SelectionPolicy, get_policy,
+                            registry_with_library_backend)
+from repro.backends.builtin import ga_loop_search
+from repro.core import cost_model
+from repro.core.function_blocks import (FunctionBlockEntry, Registry)
+from repro.core.ga import Evaluation, GAConfig
+from repro.core.offloadable import LoopNest, OffloadableApp
+from repro.core.planner import UserTarget, VerificationRecord, plan_offload
+from repro.power import (EnergyModel, FPGA_A10, GENERIC, GPU_T4,
+                         MANY_CORE_XEON, PowerEnvelope, energy_for_record,
+                         envelope_for)
+
+
+# ------------------------------------------------- scripted environment
+class ScriptedRunner:
+    """Deterministic verification environment: the app encodes its own
+    "processing time" in the output scalar."""
+
+    def measure(self, fn, inputs, reference_out):
+        out = fn(inputs)
+        return Evaluation(time_s=float(out), correct=True,
+                          info={"output": out})
+
+
+def _stage(value):
+    def impl(state):
+        s = dict(state)
+        s["out"] = jnp.float32(value)
+        return s
+    return impl
+
+
+def _scripted_app(times, nest_name="stage"):
+    nest = LoopNest(name=nest_name,
+                    impls={k: _stage(v) for k, v in times.items()})
+    return OffloadableApp(
+        name="scripted",
+        nests=[nest],
+        make_inputs=lambda seed=0, small=False: {"x": jnp.ones((4,))})
+
+
+class RooflineCostRunner:
+    """Scripted mesh verification: a real Roofline per backend key."""
+
+    def __init__(self, rooflines):
+        self.rooflines = rooflines
+
+
+def _roofline_mesh_verify(backend, cost_runner, fn, inputs):
+    rl = cost_runner.rooflines.get(backend.key)
+    if rl is None:
+        return None
+    return Evaluation(time_s=rl.step_time_s, correct=True,
+                      info={"roofline": rl.to_dict()})
+
+
+def _dp_tp_registry(**backend_overrides):
+    dp = Backend(key="dp", name="xla_dp", paper_analogue="many-core CPU",
+                 price=1.2, verify_time=1.0, mesh_role="data",
+                 power=MANY_CORE_XEON, search_fn=ga_loop_search,
+                 mesh_verify_fn=_roofline_mesh_verify,
+                 **backend_overrides.get("dp", {}))
+    tp = Backend(key="tp", name="sharded_tp", paper_analogue="GPU",
+                 price=1.0, verify_time=1.5, mesh_role="model",
+                 power=GPU_T4, search_fn=ga_loop_search,
+                 mesh_verify_fn=_roofline_mesh_verify,
+                 **backend_overrides.get("tp", {}))
+    return BackendRegistry([dp, tp])
+
+
+def _plan_kwargs(backends, **extra):
+    return dict(runner=ScriptedRunner(),
+                ga_cfg=GAConfig(population=2, generations=2),
+                registry=Registry(), backends=backends, **extra)
+
+
+# -------------------------------------------------------------- envelope
+def test_envelope_validation():
+    with pytest.raises(ValueError):
+        PowerEnvelope("bad", idle_w=-1.0, peak_w=10.0)
+    with pytest.raises(ValueError):
+        PowerEnvelope("bad", idle_w=20.0, peak_w=10.0)
+    with pytest.raises(ValueError):
+        PowerEnvelope("bad", idle_w=1.0, peak_w=10.0,
+                      memory_w_fraction=1.5)
+    env = PowerEnvelope("ok", idle_w=10.0, peak_w=70.0)
+    assert env.active_w == 60.0
+    scaled = env.scaled(4)
+    assert scaled.idle_w == 40.0 and scaled.peak_w == 280.0
+    assert scaled.memory_w_fraction == env.memory_w_fraction
+    with pytest.raises(ValueError):
+        env.scaled(0)
+
+
+def test_envelope_for_resolution():
+    # declared envelope wins; built-in calibration by analogue next;
+    # generic last
+    b = Backend(key="x", name="x", paper_analogue="GPU", price=1.0,
+                verify_time=1.0, power=FPGA_A10, search_fn=ga_loop_search)
+    assert envelope_for(b) is FPGA_A10
+    b2 = b.with_(power=None)
+    assert envelope_for(b2) is GPU_T4
+    b3 = b.with_(power=None, paper_analogue="quantum annealer")
+    assert envelope_for(b3) is GENERIC
+
+
+# ---------------------------------------------------------- energy model
+def test_roofline_carries_utilization_terms():
+    rl = cost_model.roofline_terms(1e12, 1e11, 1e9, n_chips=4)
+    step = rl.step_time_s
+    assert rl.compute_util == pytest.approx(rl.compute_s / step)
+    assert rl.memory_util == pytest.approx(rl.memory_s / step)
+    assert rl.collective_util == pytest.approx(rl.collective_s / step)
+    # the dominant term saturates its utilization when there is no bubble
+    assert max(rl.compute_util, rl.memory_util,
+               rl.collective_util) == pytest.approx(1.0)
+    # a bubble stretches the step, so every utilization shrinks
+    rb = cost_model.roofline_terms(1e12, 1e11, 1e9, n_chips=4,
+                                   bubble_fraction=0.5)
+    assert rb.memory_util == pytest.approx(rl.memory_util * 0.5)
+
+
+def test_energy_monotone_in_bubble_fraction():
+    model = EnergyModel(GPU_T4)
+    energies = []
+    for bubble in (0.0, 0.2, 0.4, 0.6):
+        rl = cost_model.roofline_terms(1e12, 1e11, 1e9, n_chips=4,
+                                       bubble_fraction=bubble)
+        energies.append(model.from_roofline(rl).energy_j)
+    assert energies == sorted(energies)
+    assert energies[0] < energies[-1]
+    # watts fall with the bubble (the device idles more of the step) even
+    # though the total joules rise
+    w0 = model.from_roofline(
+        cost_model.roofline_terms(1e12, 1e11, 1e9, n_chips=4)).avg_watts
+    w6 = model.from_roofline(
+        cost_model.roofline_terms(1e12, 1e11, 1e9, n_chips=4,
+                                  bubble_fraction=0.6)).avg_watts
+    assert w6 < w0
+
+
+def test_host_time_fallback_charges_peak_watts():
+    model = EnergyModel(GPU_T4)
+    rep = model.from_time(0.5)
+    assert rep.source == "host-time"
+    assert rep.avg_watts == pytest.approx(GPU_T4.peak_w)
+    assert rep.energy_j == pytest.approx(GPU_T4.peak_w * 0.5)
+    assert rep.edp == pytest.approx(rep.energy_j * 0.5)
+    assert rep.perf_per_watt == pytest.approx(1.0 / rep.energy_j)
+    assert model.from_time(float("inf")) is None
+    assert model.from_time(0.0) is None
+
+
+def test_energy_for_record_prefers_roofline_over_host_time():
+    rl = cost_model.roofline_terms(1e12, 1e11, 1e9, n_chips=4)
+    rec = VerificationRecord(
+        order=1, destination="x", paper_analogue="GPU", method="loop",
+        best_time_s=0.5, improvement=2.0, price=1.0, n_measurements=1,
+        verify_elapsed_s=0.0, met_target=False,
+        mesh_info={"roofline": rl.to_dict()})
+    rep = energy_for_record(rec, GPU_T4)
+    assert rep.source == "roofline"
+    assert rep.step_time_s == pytest.approx(rl.step_time_s)
+    rec.mesh_info = {}
+    assert energy_for_record(rec, GPU_T4).source == "host-time"
+    rec.correct = False
+    assert energy_for_record(rec, GPU_T4) is None
+
+
+# ----------------------------------------------------- power-aware planner
+def _comm_bound_setup():
+    """tp wins on the host but is comm-bound on the mesh; dp is a lean
+    compute-bound candidate."""
+    app = _scripted_app({"seq": 1.0, "dp": 0.8, "tp": 0.5})
+    rl_dp = cost_model.roofline_terms(2e13, 1e10, 1e8, n_chips=4)
+    rl_tp = cost_model.roofline_terms(2e13, 1e11, 5e10, n_chips=4)
+    assert rl_tp.dominant == "collective" and rl_dp.dominant == "compute"
+    cost_runner = RooflineCostRunner({"dp": rl_dp, "tp": rl_tp})
+    return app, cost_runner, rl_dp, rl_tp
+
+
+def test_power_policy_flips_comm_bound_winner():
+    """Acceptance: the comm-bound candidate wins under host-time and loses
+    under power — and the power ranking is modeled joules, not the old
+    price x time stub."""
+    app, cost_runner, rl_dp, rl_tp = _comm_bound_setup()
+    common = _plan_kwargs(_dp_tp_registry(), cost_runner=cost_runner)
+
+    host = plan_offload(app, UserTarget(), policy="host-time", **common)
+    assert host.selected.destination == "sharded_tp"
+
+    power = plan_offload(app, UserTarget(), policy="power", **common)
+    assert power.policy == "power"
+    assert power.selected.destination == "xla_dp"
+    # records carry the modeled charge the policy ranked
+    dp_rec = next(r for r in power.records
+                  if r.destination == "xla_dp" and r.method == "loop")
+    tp_rec = next(r for r in power.records
+                  if r.destination == "sharded_tp" and r.method == "loop")
+    assert dp_rec.energy_j == pytest.approx(
+        EnergyModel(MANY_CORE_XEON).from_roofline(rl_dp).energy_j)
+    assert tp_rec.energy_j == pytest.approx(
+        EnergyModel(GPU_T4).from_roofline(rl_tp).energy_j)
+    assert dp_rec.energy_j < tp_rec.energy_j
+    assert dp_rec.energy_info["source"] == "roofline"
+    # the old stub ranked price x time and would have kept tp
+    # (0.5 x 1.0 < 0.8 x 1.2)
+    assert tp_rec.best_time_s * tp_rec.price < \
+        dp_rec.best_time_s * dp_rec.price
+    # summary rows surface the energy columns
+    rows = power.summary_rows()
+    sel_row = next(row for row in rows if row["selected"])
+    assert sel_row["energy_j"] is not None
+    assert sel_row["avg_watts"] is not None
+
+
+def test_edp_policy_ranks_energy_delay_product():
+    app, cost_runner, rl_dp, rl_tp = _comm_bound_setup()
+    common = _plan_kwargs(_dp_tp_registry(), cost_runner=cost_runner)
+    report = plan_offload(app, UserTarget(), policy="edp", **common)
+    assert report.policy == "edp"
+    # dp has both lower energy and lower modeled delay here -> still wins
+    assert report.selected.destination == "xla_dp"
+    pol = get_policy("edp")
+    recs = [r for r in report.records if r.method == "loop"]
+    assert min(recs, key=pol.score).destination == "xla_dp"
+
+
+def test_host_records_get_envelope_times_host_time_fallback():
+    """No cost_runner: every correct record is still charged envelope x
+    host time, so the power policy keeps working (and prefers the T4 here:
+    0.5 s x 70 W < 0.8 s x 105 W)."""
+    app = _scripted_app({"seq": 1.0, "dp": 0.8, "tp": 0.5})
+    report = plan_offload(app, UserTarget(), policy="power",
+                          **_plan_kwargs(_dp_tp_registry()))
+    for r in report.records:
+        if r.correct and r.best_time_s < float("inf"):
+            assert r.energy_j is not None
+            assert r.energy_info["source"] == "host-time"
+    assert report.selected.destination == "sharded_tp"
+    assert report.selected.energy_j == pytest.approx(GPU_T4.peak_w * 0.5)
+
+
+# ------------------------------------------------- selection constraints
+def _record(dest, time_s, *, watts=None, energy=None, correct=True):
+    return VerificationRecord(
+        order=1, destination=dest, paper_analogue=dest, method="loop",
+        best_time_s=time_s, improvement=1.0, price=1.0, n_measurements=1,
+        verify_elapsed_s=0.0, met_target=False, correct=correct,
+        energy_j=energy, avg_watts=watts)
+
+
+def test_power_budget_excludes_over_budget_destination():
+    records = [
+        _record("fast_hot", 0.5, watts=105.0, energy=52.5),
+        _record("slow_cool", 0.8, watts=70.0, energy=56.0),
+    ]
+    host = get_policy("host-time")
+    assert host.select(records).destination == "fast_hot"
+    within = host.select(records, power_budget_w=80.0)
+    assert within.destination == "slow_cool"
+    # nothing fits an impossible budget
+    assert host.select(records, power_budget_w=10.0) is None
+    # a record with no modeled draw cannot prove it fits
+    records.append(_record("unknown_draw", 0.1))
+    assert host.select(records,
+                       power_budget_w=80.0).destination == "slow_cool"
+
+
+def test_power_budget_never_selects_incorrect_record():
+    records = [
+        _record("wrong_but_cool", 0.1, watts=5.0, energy=0.5,
+                correct=False),
+        _record("right", 0.8, watts=70.0, energy=56.0),
+    ]
+    for pol_name in ("host-time", "power", "edp"):
+        sel = get_policy(pol_name).select(records, power_budget_w=80.0)
+        assert sel.destination == "right"
+    assert get_policy("power").select(records,
+                                      power_budget_w=50.0) is None
+
+
+def test_uncharged_record_scores_in_joules_not_seconds():
+    """A record nothing charged (produced outside plan_offload) must not
+    outrank charged records through a unit mismatch: the fallback is the
+    generic envelope at peak over its time — joules, like everyone else."""
+    records = [
+        _record("charged", 0.5, watts=70.0, energy=35.0),
+        _record("uncharged", 0.4),          # energy_j is None
+    ]
+    power = get_policy("power")
+    assert power.score(records[1]) == pytest.approx(GENERIC.peak_w * 0.4)
+    # generic-peak 150 W x 0.4 s = 60 J > 35 J -> the modeled record wins
+    assert power.select(records).destination == "charged"
+    edp = get_policy("edp")
+    assert edp.score(records[1]) == pytest.approx(
+        GENERIC.peak_w * 0.4 * 0.4)
+    assert edp.select(records).destination == "charged"
+    # cell scoring keeps the same unit rule when a cell has no energy
+    # block — scaled by the cell's price (chip count), so an unmodelled
+    # big slice cannot under-score a modeled one
+    assert power.score_cell(0.4, price=8.0) == pytest.approx(
+        GENERIC.peak_w * 0.4 * 8.0)
+    assert edp.score_cell(0.4, price=8.0) == pytest.approx(
+        GENERIC.peak_w * 0.16 * 8.0)
+
+
+def test_custom_policy_with_legacy_select_signature_still_works():
+    """A registered policy that overrode select(records) before the
+    constraint kwargs existed must keep working for unconstrained calls."""
+    class Legacy(SelectionPolicy):
+        name = "test-legacy-select"
+
+        def score_parts(self, time_s, price=1.0, modeled_s=None):
+            return time_s
+
+        def select(self, records):        # pre-constraint signature
+            done = [r for r in records if r.correct]
+            return min(done, key=self.score) if done else None
+
+    app = _scripted_app({"seq": 1.0, "dp": 0.8, "tp": 0.5})
+    report = plan_offload(app, UserTarget(), policy=Legacy(),
+                          **_plan_kwargs(_dp_tp_registry()))
+    assert report.selected.destination == "sharded_tp"
+    with pytest.raises(TypeError):
+        plan_offload(app, UserTarget(), policy=Legacy(),
+                     power_budget_w=80.0,
+                     **_plan_kwargs(_dp_tp_registry()))
+
+
+def test_max_slowdown_bounds_the_energy_choice():
+    """The follow-up's "power saving within allowed slowdown": the lowest-
+    energy destination is only eligible while it stays within the factor
+    of the fastest correct one."""
+    records = [
+        _record("fast_hot", 0.5, watts=105.0, energy=52.5),
+        _record("slow_cool", 0.8, watts=50.0, energy=40.0),
+    ]
+    power = get_policy("power")
+    assert power.select(records).destination == "slow_cool"
+    # 0.8 > 1.3 x 0.5 -> the cool one is out of the allowed slowdown
+    assert power.select(records,
+                        max_slowdown=1.3).destination == "fast_hot"
+    assert power.select(records,
+                        max_slowdown=2.0).destination == "slow_cool"
+
+
+def test_plan_offload_threads_constraints_through():
+    app = _scripted_app({"seq": 1.0, "dp": 0.5, "tp": 0.8})
+    # host-time would pick dp (0.5 s) but its Xeon envelope draws 105 W
+    report = plan_offload(app, UserTarget(), policy="power",
+                          power_budget_w=80.0,
+                          **_plan_kwargs(_dp_tp_registry()))
+    assert report.selected.destination == "sharded_tp"
+    assert report.selected.avg_watts <= 80.0
+    # within an allowed slowdown of 1.3 the cheap-but-slow tp (0.8 s) is
+    # ineligible, so the fastest correct destination keeps winning
+    report2 = plan_offload(app, UserTarget(), policy="power",
+                           max_slowdown=1.3,
+                           **_plan_kwargs(_dp_tp_registry()))
+    assert report2.selected.destination == "xla_dp"
+
+
+# -------------------------------------- function-blocks-only backend
+def test_library_backend_slots_into_fb_phase_only():
+    reg = registry_with_library_backend()
+    order = reg.verification_order()
+    # the default registry is untouched and the new registry has 4 backends
+    assert len(DEFAULT_REGISTRY) == 3
+    assert len(reg) == 4
+    assert [(b.key, m) for b, m in order] == [
+        ("dp", "function_block"),
+        ("fb_gpu_lib", "function_block"),     # verify_time 1.2 slots here
+        ("tp", "function_block"),
+        ("pallas", "function_block"),
+        ("dp", "loop"), ("tp", "loop"), ("pallas", "loop"),
+    ]
+    assert ("fb_gpu_lib", "loop") not in [(b.key, m) for b, m in order]
+    assert GPU_LIBRARY.methods == ("function_block",)
+    # forcing a loop search on it is a programming error, not a silent skip
+    app = _scripted_app({"seq": 1.0})
+    from repro.backends import SearchContext
+    ctx = SearchContext(runner=ScriptedRunner(), inputs={}, ref_out=None)
+    with pytest.raises(NotImplementedError):
+        GPU_LIBRARY.search(app, ctx, method="loop")
+
+
+def test_library_backend_offloads_via_function_block_db():
+    """End-to-end: the FB-only backend wins when the DB has a library
+    implementation for it — one extra FB verification, no loop one."""
+    fb_db = Registry()
+    fb_db.register(FunctionBlockEntry(
+        name="stagekernel", match_names=("stage",),
+        ref_fn=lambda s: s, example_args=lambda: ({},),
+        impls={"fb_gpu_lib": _stage(0.1)}))
+    # a library card with its own (cheaper) envelope: the loop searches all
+    # re-measure the pinned FB pattern (residual rule, one nest), so the
+    # envelope is what strictly separates the library from the tp loop
+    lib_env = PowerEnvelope("lib-card", idle_w=5.0, peak_w=40.0)
+    fb_only = Backend(key="fb_gpu_lib", name="gpu_fb_library",
+                      paper_analogue="GPU library", price=1.0,
+                      verify_time=1.2, methods=("function_block",),
+                      power=lib_env)
+    reg = _dp_tp_registry()
+    reg.register(fb_only)
+
+    app = _scripted_app({"seq": 1.0, "dp": 0.8, "tp": 0.5})
+    report = plan_offload(app, UserTarget(), policy="power",
+                          runner=ScriptedRunner(),
+                          ga_cfg=GAConfig(population=2, generations=2),
+                          registry=fb_db, backends=reg)
+    # 3 FB verifications (dp, fb_lib, tp) + 2 loop verifications (dp, tp)
+    assert [(r.destination, r.method) for r in report.records] == [
+        ("xla_dp", "function_block"),
+        ("gpu_fb_library", "function_block"),
+        ("sharded_tp", "function_block"),
+        ("xla_dp", "loop"), ("sharded_tp", "loop"),
+    ]
+    fb_rec = report.records[1]
+    assert fb_rec.correct and fb_rec.best_time_s == pytest.approx(0.1)
+    # fastest AND cheapest: 0.1 s x 40 W beats everything
+    assert report.selected is fb_rec
+    assert report.selected.energy_j == pytest.approx(40.0 * 0.1)
