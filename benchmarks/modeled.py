@@ -24,7 +24,6 @@ from pathlib import Path
 
 def main():
     import jax
-    import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.apps import APPS

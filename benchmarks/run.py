@@ -132,7 +132,6 @@ def table_ga_convergence():
 def table_kernels():
     import jax
     import jax.numpy as jnp
-    import numpy as np
     from repro.kernels import ref
     from repro.kernels import matmul as mm
     from repro.kernels import tdfir as fir

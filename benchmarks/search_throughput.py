@@ -10,6 +10,13 @@ Scores the *same* gene population three ways and emits ``BENCH_search.json``:
   * ``cached_warm`` — a fresh process against the disk layer the cold run
     wrote: zero compiles, pure roofline arithmetic.
 
+A fourth section (``linted``) crosses the population with every
+``microbatches`` gene value under a batch-6 shape and evaluates it with the
+``repro.analysis`` plan linter off vs on: infeasible values are structural
+(each costs a real compile unlinted) and must be statically pruned before
+any trace — the section reports the pruned count and candidates/second both
+ways.
+
 The population is deliberately schedule-heavy (every structural base is
 crossed with all pipeline_schedule x virtual_stages combinations) — the
 exact redundancy the GA exhibits, since the model-only genes multiply the
@@ -149,7 +156,43 @@ def main():
     cold_s, cold_stats = cached_pass()
     warm_s, warm_stats = cached_pass()
 
+    # --- linted pass (repro.analysis): cross the population with every
+    # microbatches gene value under a batch-6 shape — values that don't
+    # divide the batch are statically infeasible, and the linter must prune
+    # them before any trace/compile (microbatches is structural, so without
+    # the linter each infeasible value costs a real XLA compile)
+    from repro.analysis import lint_plan
+    from repro.configs.base import ShapeConfig
+
+    idx = {g.field: i for i, g in enumerate(Plan.GENE_SPACE)}
+    mb_i = idx["microbatches"]
+    lint_pop = []
+    for g in population:
+        for m in range(len(Plan.GENE_SPACE[mb_i].choices)):
+            gg = list(g)
+            gg[mb_i] = m
+            lint_pop.append(tuple(gg))
+    lint_shape = ShapeConfig("bench_b6", seq_len=32, global_batch=6,
+                             kind="train")
+
+    def linted_pass(lint):
+        cache = sc.SearchCache()        # memory-only, fresh per pass
+        evaluate_batch = sc.make_cached_batch_evaluator(
+            lower_plan, runner, cache, key_extra=("bench", "mlp-lint"),
+            pipe_ranks=2, workers=args.workers, lint=lint)
+        t0 = time.perf_counter()
+        evaluate_batch(list(lint_pop))
+        return time.perf_counter() - t0, cache.stats
+
+    lint_off_s, lint_off_stats = linted_pass(None)
+    lint_on_s, lint_on_stats = linted_pass(
+        lambda plan: lint_plan(plan, shape=lint_shape))
+    assert lint_on_stats.static_pruned > 0
+    assert lint_on_stats.unique_compiles < lint_off_stats.unique_compiles, \
+        (lint_on_stats.unique_compiles, lint_off_stats.unique_compiles)
+
     n = len(population)
+    n_lint = len(lint_pop)
     result = {
         "candidates": n,
         "unique_structural_keys": len(unique_keys),
@@ -166,6 +209,20 @@ def main():
                         "candidates_per_s": round(n / warm_s, 3)},
         "speedup_cold": round(uncached_s / cold_s, 2),
         "speedup_warm": round(uncached_s / warm_s, 2),
+        "linted": {
+            "candidates": n_lint,
+            "shape": {"global_batch": lint_shape.global_batch,
+                      "kind": lint_shape.kind},
+            "off": {"wall_s": round(lint_off_s, 3),
+                    "compiles": lint_off_stats.unique_compiles,
+                    "static_pruned": lint_off_stats.static_pruned,
+                    "candidates_per_s": round(n_lint / lint_off_s, 3)},
+            "on": {"wall_s": round(lint_on_s, 3),
+                   "compiles": lint_on_stats.unique_compiles,
+                   "static_pruned": lint_on_stats.static_pruned,
+                   "candidates_per_s": round(n_lint / lint_on_s, 3)},
+            "speedup": round(lint_off_s / lint_on_s, 2),
+        },
     }
     Path(args.out).write_text(json.dumps(result, indent=1))
 
@@ -174,8 +231,14 @@ def main():
         r = result[k]
         print(f"search/{k},{r['wall_s'] / n * 1e6:.1f},"
               f"compiles={r['compiles']}|cps={r['candidates_per_s']}")
+    for k in ("off", "on"):
+        r = result["linted"][k]
+        print(f"search/lint_{k},{r['wall_s'] / n_lint * 1e6:.1f},"
+              f"compiles={r['compiles']}|pruned={r['static_pruned']}"
+              f"|cps={r['candidates_per_s']}")
     print(f"search/speedup,{result['speedup_cold']},"
-          f"warm={result['speedup_warm']}x -> {args.out}")
+          f"warm={result['speedup_warm']}x "
+          f"lint={result['linted']['speedup']}x -> {args.out}")
     # acceptance: the cached path scores >= 3x candidates/second on the
     # same population (cold already: 6 schedule combos share one compile)
     if result["speedup_cold"] < 3.0 and result["speedup_warm"] < 3.0:

@@ -1,0 +1,32 @@
+"""repro.analysis — static analysis that prunes the search before any
+compile (paper §II.A: structure analysis precedes every measurement).
+
+Three passes, one CLI:
+
+  * :func:`lint_plan` — pure-arithmetic feasibility of a Plan × mesh ×
+    arch spec (``plan_lint``); wired into the GA evaluators so
+    error-severity candidates take the penalty with zero XLA work.
+  * :func:`audit_gene_space` — proves the ``structural=False`` gene flags
+    against the traced artifact (``gene_audit``): the ``SearchCache``
+    identity contract, enforced instead of commented.
+  * :func:`lint_kernels` — block/grid/index-map checks over the Pallas
+    kernels (``kernel_lint``).
+
+CLI: ``python -m repro.analysis.lint [--arch ... --plan ... --strict]``.
+"""
+from repro.analysis.findings import (ERROR, INFO, WARNING, Finding,
+                                     findings_to_json, has_errors,
+                                     max_severity, sort_findings)
+from repro.analysis.gene_audit import (GeneAudit, audit_findings,
+                                       audit_gene_space)
+from repro.analysis.kernel_lint import (KernelModel, OperandSpec,
+                                        check_model, lint_kernels)
+from repro.analysis.plan_lint import DEVICE_MEMORY_BYTES, lint_plan
+
+__all__ = [
+    "ERROR", "WARNING", "INFO", "Finding", "findings_to_json",
+    "has_errors", "max_severity", "sort_findings",
+    "GeneAudit", "audit_findings", "audit_gene_space",
+    "KernelModel", "OperandSpec", "check_model", "lint_kernels",
+    "DEVICE_MEMORY_BYTES", "lint_plan",
+]

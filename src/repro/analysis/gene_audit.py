@@ -1,0 +1,178 @@
+"""Gene-contract audit: prove the ``structural=False`` flags in
+``Plan.GENE_SPACE`` against the traced artifact.
+
+``repro.core.search_cache`` dedupes the GA's compiles by
+``Plan.structural_key()``, which *excludes* every gene flagged
+``structural=False`` (model-only): the contract is that flipping such a gene
+never changes the lowered artifact, only the analytic cost model on top of
+it.  ROADMAP: "a wrong model-only flag poisons the cache" — two genuinely
+different artifacts would share one cache entry and every search would score
+one of them with the other's roofline.  Until now that contract was a
+comment; this pass proves it.
+
+Method: trace a base plan and, for each audited gene, every flipped value;
+compare the full jaxpr pretty-print (shapes included — a gene that only
+changes a block size still moves dimensions).  Any nonzero diff on a
+model-only gene is a ``G001`` error finding.  The default trace is a tiny
+dense train step on CPU (no mesh), deliberately sensitive to the structural
+genes that have train-step reach (remat, microbatches, vocab_chunk) — the
+pinned test injects a mislabeled gene space and asserts the audit catches
+it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import ERROR, INFO, Finding
+
+
+@dataclass(frozen=True)
+class GeneAudit:
+    """Verdict for one audited gene."""
+    field: str
+    declared_model_only: bool
+    artifact_invariant: bool
+    base_value: object
+    checked_values: Tuple
+    detail: str = ""            # first divergence, "" when invariant
+
+    @property
+    def violation(self) -> bool:
+        """True when the cache identity is unsound for this gene."""
+        return self.declared_model_only and not self.artifact_invariant
+
+
+def default_trace_fn() -> Callable[[object], str]:
+    """(plan) -> artifact text for a tiny dense train step, no mesh.
+
+    Small enough to trace on CPU in well under a second, but routed through
+    the real ``Model`` / ``make_train_step`` stack so every train-reaching
+    gene (remat, microbatches, vocab_chunk, opt_state_dtype, ...) shows in
+    the jaxpr if and only if it shows in production lowering.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import ShapeDtypeStruct as SDS
+
+    from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+    from repro.dist.sharding import NullRules
+    from repro.launch import specs
+    from repro.models.lm import Model
+    from repro.train import optimizer, train_step as ts
+
+    cfg = ModelConfig(name="audit-tiny", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=256, d_head=16, vocab_pad_multiple=16,
+                      dtype="float32", param_dtype="float32")
+    shape = ShapeConfig("audit-train", seq_len=32, global_batch=8,
+                        kind="train")
+
+    def trace(plan) -> str:
+        model = Model(cfg, plan, NullRules())
+        tcfg = TrainConfig(microbatches=plan.microbatches,
+                           master_dtype=plan.opt_state_dtype)
+        key_sds = SDS((2,), jnp.uint32)
+        params_sds = jax.eval_shape(lambda k: model.init(k), key_sds)
+        opt_sds = jax.eval_shape(lambda p: optimizer.init(p, tcfg),
+                                 params_sds)
+        batch_sds = specs.batch_specs(cfg, shape)
+        fn = ts.make_train_step(model, tcfg)
+        closed = jax.make_jaxpr(fn)(params_sds, opt_sds, batch_sds,
+                                    SDS((), jnp.int32))
+        return str(closed)
+
+    return trace
+
+
+def _diff_summary(base: str, flipped: str) -> str:
+    """First differing line of two artifact texts (compact evidence)."""
+    for i, (a, b) in enumerate(zip(base.splitlines(),
+                                   flipped.splitlines())):
+        if a != b:
+            return (f"first diff at jaxpr line {i}: "
+                    f"{a.strip()[:80]!r} != {b.strip()[:80]!r}")
+    return (f"jaxpr length differs: {len(base.splitlines())} vs "
+            f"{len(flipped.splitlines())} lines")
+
+
+def audit_gene_space(trace_fn: Optional[Callable[[object], str]] = None,
+                     gene_space: Optional[Sequence] = None,
+                     base_plan=None,
+                     fields: Optional[Sequence[str]] = None
+                     ) -> List[GeneAudit]:
+    """Audit genes against the traced artifact.
+
+    By default only the ``structural=False`` (model-only) genes are audited
+    — those are the ones whose flag, if wrong, silently poisons
+    ``Plan.structural_key()``.  Pass ``fields`` to audit specific genes
+    (e.g. the test's deliberately mislabeled one), or a modified
+    ``gene_space`` to audit a hypothetical contract before adopting it.
+    """
+    from repro.dist.plan import Plan
+
+    if gene_space is None:
+        gene_space = Plan.GENE_SPACE
+    if trace_fn is None:
+        trace_fn = default_trace_fn()
+    if base_plan is None:
+        base_plan = Plan(name="gene-audit-base")
+
+    todo = [g for g in gene_space
+            if (g.field in fields if fields is not None else not g.structural)]
+    base_text = trace_fn(base_plan) if todo else ""
+
+    audits: List[GeneAudit] = []
+    for gene in todo:
+        base_value = getattr(base_plan, gene.field)
+        flips = tuple(c for c in gene.choices if c != base_value)
+        detail = ""
+        invariant = True
+        for choice in flips:
+            flipped = dataclasses.replace(base_plan, **{gene.field: choice})
+            text = trace_fn(flipped)
+            if text != base_text:
+                invariant = False
+                detail = (f"{gene.field}={choice!r} changes the artifact "
+                          f"vs {base_value!r}: "
+                          + _diff_summary(base_text, text))
+                break
+        audits.append(GeneAudit(
+            field=gene.field, declared_model_only=not gene.structural,
+            artifact_invariant=invariant, base_value=base_value,
+            checked_values=flips, detail=detail))
+    return audits
+
+
+def audit_findings(audits: Sequence[GeneAudit]) -> List[Finding]:
+    """Finding records for an audit run (G001 = contract violation)."""
+    out: List[Finding] = []
+    for a in audits:
+        if a.violation:
+            out.append(Finding(
+                "G001", ERROR,
+                f"gene {a.field!r} is flagged structural=False but flipping "
+                f"it changes the lowered artifact — Plan.structural_key() "
+                f"would alias distinct compiles ({a.detail})",
+                plan_field=a.field, subject="gene-audit"))
+        elif a.declared_model_only:
+            out.append(Finding(
+                "G002", INFO,
+                f"gene {a.field!r}: artifact-invariant over "
+                f"{list(a.checked_values)!r} — model-only flag verified",
+                plan_field=a.field, subject="gene-audit"))
+        elif not a.artifact_invariant:
+            out.append(Finding(
+                "G003", INFO,
+                f"gene {a.field!r} is structural and indeed changes the "
+                f"artifact ({a.detail})",
+                plan_field=a.field, subject="gene-audit"))
+        else:
+            out.append(Finding(
+                "G004", INFO,
+                f"gene {a.field!r} is flagged structural but produced no "
+                "artifact diff under this trace — either inert on the audit "
+                "model or a candidate for structural=False",
+                plan_field=a.field, subject="gene-audit"))
+    return out

@@ -1,0 +1,282 @@
+"""Static plan feasibility lint: pure arithmetic over Plan × mesh × arch.
+
+The paper's pipeline opens with *static* structure analysis (Clang loop /
+function-block parsing) before any measurement is spent; this is the
+framework-side analogue: every check here replicates, in closed form, a
+decision the runtime stack makes while tracing / lowering / modeling a
+:class:`repro.dist.plan.Plan` — so an infeasible or self-contradictory
+candidate is rejected for the GA's penalty without paying for a trace or an
+XLA compile (see ``make_cached_batch_evaluator(lint=...)``).
+
+What "error" means here is narrow: the artifact provably cannot be built
+(the ``batch % microbatches`` assert in ``repro.train.train_step``, an
+unknown pipeline schedule on an explicitly pipelined cell, parameters that
+overflow the mesh's aggregate HBM even perfectly sharded).  Everything the
+runtime *survives by silently degrading* — ``Rules`` prefix-sharding
+falling back to replication, ``chunked_softmax_xent`` disabling itself on a
+non-dividing sequence, ``pipeline_apply``'s sequential fallback — is a
+warning: the plan lowers, but not to what its genes claim.
+
+No jax import is required: ``mesh`` may be a ``jax.sharding.Mesh`` or a
+plain ``{axis: size}`` dict (the CLI uses dicts so linting 512-chip meshes
+never instantiates 512 fake devices).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.findings import ERROR, INFO, WARNING, Finding
+
+GiB = 1024 ** 3
+# per-chip HBM capacity the dry-run's fits_16GiB verdict assumes
+DEVICE_MEMORY_BYTES = 16 * GiB
+
+_DTYPE_BYTES = {"float32": 4, "float16": 2, "bfloat16": 2, "int8": 1}
+
+# mirror of repro.dist.sharding.BASE_RULES for the dims the lint reasons
+# about (kv_seq joins under Plan.decode_kv_seq_shard, as in Rules.__init__)
+_BATCH_AXES = ("pod", "data")
+_MODEL_DIMS = ("heads", "kv_heads", "ff", "vocab")
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    """Axis-name -> size for a jax Mesh, a {axis: size} dict, or None."""
+    if mesh is None:
+        return {}
+    if isinstance(mesh, dict):
+        return {str(a): int(s) for a, s in mesh.items()}
+    shape = getattr(mesh, "shape", None)
+    if shape is not None and hasattr(shape, "items"):
+        return {str(a): int(s) for a, s in shape.items()}
+    raise TypeError(f"mesh must be a Mesh, dict or None: {type(mesh)!r}")
+
+
+def _prefix_take(dim: int, axes, sizes: Dict[str, int]) -> int:
+    """How many leading axes Rules._assign would shard ``dim`` over."""
+    size, take = 1, 0
+    for a in axes:
+        if a not in sizes or dim % (size * sizes[a]) != 0:
+            break
+        size *= sizes[a]
+        take += 1
+    return take
+
+
+def _dtype_bytes(name: str) -> int:
+    return _DTYPE_BYTES.get(str(name), 4)
+
+
+def lint_plan(plan, *, mesh=None, cfg=None, shape=None,
+              pipelined: bool = False,
+              device_memory_bytes: int = DEVICE_MEMORY_BYTES
+              ) -> List[Finding]:
+    """Pure-arithmetic feasibility findings for one plan.
+
+    ``mesh`` / ``cfg`` / ``shape`` are each optional — a check that needs a
+    missing ingredient is skipped, so the linter is usable from the gene-level
+    GA (mesh only) up to the full dry-run cell (all three).  ``pipelined``
+    mirrors ``repro.launch.dryrun``: the pipeline-schedule genes are
+    *requested* (not merely carried as model-only genes), so hostability
+    failures become errors instead of modeling notes.
+    """
+    out: List[Finding] = []
+    subject = getattr(plan, "name", "") or ""
+
+    def add(rule_id, severity, message, plan_field=None, **context):
+        out.append(Finding(rule_id, severity, message, plan_field=plan_field,
+                           subject=subject, context=context))
+
+    sizes = _axis_sizes(mesh)
+    n_devices = 1
+    for s in sizes.values():
+        n_devices *= max(s, 1)
+    kind = getattr(shape, "kind", None)
+    seq = getattr(shape, "seq_len", None)
+    batch = getattr(shape, "global_batch", None)
+
+    # --- P001: nonpositive gene values (nothing downstream tolerates them)
+    for f, lo in (("microbatches", 1), ("virtual_stages", 1),
+                  ("attn_block_q", 1), ("attn_block_kv", 1),
+                  ("blockwise_attn_threshold", 1), ("moe_groups", 1),
+                  ("vocab_chunk", 0), ("ssd_chunk", 0)):
+        v = getattr(plan, f, lo)
+        if not isinstance(v, (int, float)) or v < lo:
+            add("P001", ERROR, f"{f}={v!r} must be >= {lo}", plan_field=f)
+    cap = getattr(plan, "moe_capacity_factor", None)
+    if cap is not None and (not isinstance(cap, (int, float)) or cap <= 0):
+        add("P001", ERROR, f"moe_capacity_factor={cap!r} must be > 0",
+            plan_field="moe_capacity_factor")
+    if out:                      # nonsense values poison every later check
+        return out
+
+    micro = getattr(plan, "microbatches", 1)
+    schedule = getattr(plan, "pipeline_schedule", "gpipe")
+    virtual = getattr(plan, "virtual_stages", 1)
+    pod = sizes.get("pod", 1)
+
+    # --- P002: microbatch split divisibility — the one hard trace-time
+    # assert in plan space (_split_microbatches: batch % microbatches)
+    if batch is not None and micro > 1:
+        if kind == "train" and batch % micro != 0:
+            add("P002", ERROR,
+                f"global_batch {batch} % microbatches {micro} != 0: "
+                "gradient-accumulation split asserts at trace time",
+                plan_field="microbatches", batch=batch, microbatches=micro)
+        elif kind not in (None, "train"):
+            add("P103", INFO,
+                f"microbatches={micro} is inert on a {kind} shape "
+                "(no gradient accumulation)", plan_field="microbatches")
+
+    # --- P003/P004/P005: pipeline-schedule hostability ------------------
+    from repro.dist.schedules import get_schedule
+    sched = get_schedule(schedule)
+    if sched is None:
+        add("P003", ERROR if pipelined else WARNING,
+            f"unknown pipeline schedule {schedule!r}: "
+            + ("the requested pipeline cannot be built" if pipelined else
+               "the cost model charges bubble 0 (sequential fallback)"),
+            plan_field="pipeline_schedule")
+    if pipelined and pod <= 1:
+        add("P005", WARNING,
+            "pipeline requested but the mesh has no pod axis (>1): "
+            "pipeline_apply falls back to the sequential reference",
+            plan_field="pipeline_schedule", pod=pod)
+    if sched is not None and pod > 1:
+        v = max(virtual, 1) if schedule == "interleaved" else 1
+        built = sched.build(n_stages=pod * v, n_ranks=pod,
+                            microbatches=micro, virtual_stages=v)
+        if built is None and pipelined:
+            add("P004", ERROR,
+                f"schedule {schedule!r} cannot host stages={pod * v} "
+                f"ranks={pod} microbatches={micro} virtual={v} "
+                "(Schedule.build returned None)",
+                plan_field="pipeline_schedule")
+        elif built is not None and pipelined and micro < pod:
+            add("P007", INFO,
+                f"microbatches {micro} < pipeline ranks {pod}: bubble "
+                f"fraction {built.bubble_fraction:.2f} of every step",
+                plan_field="microbatches",
+                bubble_fraction=round(built.bubble_fraction, 4))
+    if virtual > 1 and schedule != "interleaved":
+        add("P006", WARNING,
+            f"virtual_stages={virtual} is ignored by schedule "
+            f"{schedule!r} (an interleaved-only gene)",
+            plan_field="virtual_stages")
+
+    # --- P008: parameter memory vs aggregate device capacity ------------
+    if cfg is not None:
+        n_params = cfg.n_params()
+        p_bytes = n_params * _dtype_bytes(getattr(cfg, "param_dtype",
+                                                  "bfloat16"))
+        total = p_bytes
+        if kind == "train":
+            # fp32 grad accumulators + two Adam moments in the plan's
+            # opt-state dtype: the floor any training step must hold
+            total += n_params * 4
+            total += 2 * n_params * _dtype_bytes(
+                getattr(plan, "opt_state_dtype", "float32"))
+        capacity = n_devices * device_memory_bytes
+        if total > capacity:
+            add("P008", ERROR,
+                f"state floor {total / GiB:.1f} GiB (params"
+                + (" + grads + opt moments" if kind == "train" else "")
+                + f") exceeds the mesh's aggregate {capacity / GiB:.0f} GiB"
+                f" ({n_devices} x {device_memory_bytes / GiB:.0f} GiB): "
+                "cannot fit even fully sharded",
+                plan_field="opt_state_dtype" if kind == "train" else None,
+                state_bytes=total, capacity_bytes=capacity)
+
+    # --- P009: chunked-xent silent disable ------------------------------
+    chunk = getattr(plan, "vocab_chunk", 0)
+    if chunk and kind == "train" and seq is not None:
+        eff = min(chunk, seq)
+        if seq % eff != 0:
+            add("P009", WARNING,
+                f"vocab_chunk={chunk}: seq_len {seq} % {eff} != 0, "
+                "chunked_softmax_xent silently falls back to the full "
+                "(unchunked) loss", plan_field="vocab_chunk")
+    elif chunk and kind in ("prefill", "decode"):
+        add("P103", INFO, f"vocab_chunk={chunk} is inert on a {kind} shape "
+            "(no training loss)", plan_field="vocab_chunk")
+
+    # --- P010: batch prefix-sharding degradation ------------------------
+    if batch is not None and batch > 1 and sizes:
+        # batch == 1 carries no signal: a singleton batch cannot shard and
+        # that is the shape cell's property, not a plan defect
+        avail = tuple(a for a in _BATCH_AXES if sizes.get(a, 1) > 1)
+        if avail:
+            take = _prefix_take(batch, avail, sizes)
+            if take == 0:
+                add("P010", WARNING,
+                    f"global_batch {batch} is divisible by no prefix of "
+                    f"the batch axes {avail}: the batch replicates "
+                    "(data parallelism is lost)", batch=batch)
+            elif take < len(avail):
+                add("P010", INFO,
+                    f"global_batch {batch} shards over {avail[:take]} "
+                    f"only; {avail[take:]} replicate", batch=batch)
+
+    # --- P011: model-dim replication (an arch property, not plan-fixable)
+    model_size = sizes.get("model", 1)
+    if cfg is not None and model_size > 1:
+        dims = {"heads": cfg.n_heads, "kv_heads": cfg.n_kv_heads,
+                "ff": cfg.d_ff, "vocab": cfg.padded_vocab}
+        for logical in _MODEL_DIMS:
+            dim = dims[logical]
+            if dim % model_size != 0:
+                add("P011", INFO,
+                    f"{logical}={dim} % model axis {model_size} != 0: "
+                    "Rules replicates this dimension (tensor parallelism "
+                    "degrades for the arch, independent of the plan)",
+                    logical=logical, dim=dim)
+
+    # --- P012/P013: serving genes ---------------------------------------
+    if getattr(plan, "decode_kv_seq_shard", False):
+        if kind == "decode" and seq is not None and model_size > 1 \
+                and seq % model_size != 0:
+            add("P012", WARNING,
+                f"decode_kv_seq_shard: kv_seq {seq} % model axis "
+                f"{model_size} != 0, the requested cache sharding "
+                "silently replicates", plan_field="decode_kv_seq_shard")
+        elif kind in ("train", "prefill"):
+            add("P013", INFO,
+                f"decode_kv_seq_shard is inert on a {kind} shape",
+                plan_field="decode_kv_seq_shard")
+    if getattr(plan, "kv_cache_quant", False) and kind == "train":
+        add("P013", INFO, "kv_cache_quant is inert on a train shape "
+            "(no decode cache)", plan_field="kv_cache_quant")
+
+    # --- P014/P015/P016: genes contradicting the cell -------------------
+    if kind in ("prefill", "decode") and getattr(plan, "remat",
+                                                 "none") != "none":
+        add("P014", INFO,
+            f"remat={plan.remat!r} is inert on a {kind} shape "
+            "(no backward pass to rematerialize for)", plan_field="remat")
+    if cfg is not None and getattr(cfg, "moe", None) is None \
+            and getattr(plan, "moe_impl", "gspmd") != "gspmd":
+        add("P015", INFO,
+            f"moe_impl={plan.moe_impl!r} is inert: {cfg.name} has no MoE "
+            "layers", plan_field="moe_impl")
+    if getattr(plan, "grad_compression", False):
+        if kind in ("prefill", "decode"):
+            add("P013", INFO,
+                f"grad_compression is inert on a {kind} shape",
+                plan_field="grad_compression")
+        elif sizes and pod <= 1:
+            add("P016", WARNING,
+                "grad_compression compresses the cross-pod grad psum, but "
+                "the mesh has no pod axis (>1): nothing is compressed",
+                plan_field="grad_compression")
+
+    # --- P017: implicit attention-block padding -------------------------
+    thresh = getattr(plan, "blockwise_attn_threshold", 1 << 30)
+    if seq is not None and kind in ("train", "prefill") and seq >= thresh:
+        for f in ("attn_block_q", "attn_block_kv"):
+            blk = min(getattr(plan, f, seq), seq)
+            if blk and seq % blk != 0:
+                add("P017", INFO,
+                    f"{f}={getattr(plan, f)}: seq {seq} % {blk} != 0, "
+                    "blockwise attention pads the sequence (wasted tiles)",
+                    plan_field=f)
+
+    return out

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 
 from repro.core.function_blocks import FunctionBlockEntry, REGISTRY
 from repro.apps import tdfir_app
-from repro.kernels import ops as kops
 
 
 def _tdfir_ref_example():

@@ -7,8 +7,7 @@ reduced (``reduced()``) for CPU smoke tests.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 

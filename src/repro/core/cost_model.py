@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, asdict
-from typing import Dict, Optional
+from typing import Dict
 
 # TPU v5e hardware constants (per chip)
 PEAK_FLOPS = 197e12        # bf16 FLOP/s

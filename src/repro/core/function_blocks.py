@@ -8,7 +8,7 @@ in ``repro.kernels``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
 from repro.core import jaxpr_tools

@@ -132,6 +132,10 @@ def run_ga(gene_length: int,
             "mean_fitness": sum(fits) / len(fits),
             "n_correct": sum(e.correct for e in evals),
             "n_fresh": n_fresh,
+            # individuals a static linter rejected without any measurement
+            # (repro.analysis via the batch evaluator / loop-GA lint hooks)
+            "n_pruned": sum(bool(e.info.get("static_pruned"))
+                            for e in evals),
         })
 
         if gen == cfg.generations - 1:

@@ -18,7 +18,6 @@ Heuristics (documented, deliberately simple — dots dominate):
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -148,10 +147,7 @@ class HloModule:
                     depth -= 1
                     if depth == 0:
                         arglist = re.findall(r"%([\w.\-]+)", rest[:i])
-                        rest_attrs = rest[i + 1:]
                         break
-            else:
-                rest_attrs = rest
             op = Op(name=name, opcode=opcode, result=parse_shapes(rtype),
                     operands=arglist, line=stripped)
             cur.ops[name] = op

@@ -8,7 +8,7 @@ and similarity is Jaccard over fingerprint sets.
 """
 from __future__ import annotations
 
-from typing import Any, List, Sequence, Set
+from typing import List, Sequence, Set
 
 import jax
 import numpy as np

@@ -19,8 +19,8 @@ has to learn which loops are safe.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, List
 
 State = Dict[str, object]
 

@@ -27,7 +27,6 @@ selection — the power follow-up's "fastest within the power budget" and
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
@@ -142,7 +141,8 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                  backends: Optional[BackendRegistry] = None,
                  policy: Union[str, SelectionPolicy, None] = None,
                  power_budget_w: Optional[float] = None,
-                 max_slowdown: Optional[float] = None
+                 max_slowdown: Optional[float] = None,
+                 lint_choice=None
                  ) -> PlanReport:
     """Run the registry's verifications and select a destination.
 
@@ -163,6 +163,11 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
     ``modeled`` consumes the recorded ``mesh_time_s``; ``power`` / ``edp``
     consume the modeled ``energy_j`` this function charges every correct
     record via repro.power).
+
+    ``lint_choice`` (repro.analysis) statically rejects loop-offload
+    choices before any trace/compile: a callable mapping a choice dict to
+    a list of :class:`~repro.analysis.Finding`; choices with an
+    error-severity finding are charged the penalty without measurement.
 
     ``power_budget_w`` restricts selection to destinations whose modeled
     average draw fits the budget; ``max_slowdown`` restricts it to
@@ -199,7 +204,7 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
         # one penalty scale for every verification in this run (GA-internal
         # evaluations get it via run_ga; direct measurements get it stamped)
         penalty_s=ga_cfg.penalty_s if ga_cfg is not None else None,
-        seed=seed, fb_matches=matches)
+        seed=seed, fb_matches=matches, lint_choice=lint_choice)
 
     records: List[VerificationRecord] = []
     fb_pinned = False                   # residual rule state

@@ -108,6 +108,9 @@ class CacheStats:
     disk_hits: int = 0       # subset of hits served by the on-disk layer
     misses: int = 0          # fresh lower+compile (== unique artifacts)
     compile_s: float = 0.0   # wall seconds spent in fresh lower+compile
+    # candidates rejected by the static linter (repro.analysis) before any
+    # tracing — they count in ``candidates`` but in neither hits nor misses
+    static_pruned: int = 0
 
     @property
     def unique_compiles(self) -> int:
@@ -123,7 +126,8 @@ class CacheStats:
                 "disk_hits": self.disk_hits,
                 "unique_compiles": self.unique_compiles,
                 "hit_rate": round(self.hit_rate, 4),
-                "compile_s": round(self.compile_s, 3)}
+                "compile_s": round(self.compile_s, 3),
+                "static_pruned": self.static_pruned}
 
 
 # ------------------------------------------------------------------- cache
@@ -309,6 +313,7 @@ def make_cached_batch_evaluator(
         pipe_ranks: int = 1,
         workers: int = 4,
         from_genes: Optional[Callable[[Tuple[int, ...]], Any]] = None,
+        lint: Optional[Callable[[Any], Sequence]] = None,
 ) -> Callable[[List[Tuple[int, ...]]], List[Any]]:
     """Build a ``run_ga(evaluate_batch=...)`` callback over the cache.
 
@@ -326,6 +331,14 @@ def make_cached_batch_evaluator(
     its own bubble fraction — at most one XLA compile per unique structural
     key, ever.  The callback exposes ``.cache`` (the :class:`SearchCache`)
     and ``.evaluate`` (a per-individual fallback for ``run_ga``).
+
+    ``lint(plan)`` (e.g. a closure over
+    :func:`repro.analysis.lint_plan`) returns static findings for one
+    candidate; any error-severity finding rejects it with the GA penalty
+    *before* tracing — it never reaches the worker pool or XLA, and
+    ``stats.static_pruned`` counts it.  Lint verdicts are memoized per
+    structural key, so a plan family is linted once per generation no
+    matter how many schedule variants the GA breeds.
     """
     from concurrent.futures import ThreadPoolExecutor
 
@@ -341,6 +354,7 @@ def make_cached_batch_evaluator(
             return Plan.from_genes(list(genes))
 
     key_prefix = tuple(key_extra)
+    lint_memo: Dict[Tuple[int, ...], list] = {}
 
     def evaluate_batch(generation: List[Tuple[int, ...]]) -> List[Any]:
         plans = [from_genes(g) for g in generation]
@@ -348,10 +362,27 @@ def make_cached_batch_evaluator(
         hashes = [hash_key(k) for k in keys]
         cache.stats.candidates += len(generation)
 
+        # static pruning: error-severity lint findings reject a candidate
+        # before it can reach the trace/compile pool (memoized per gene
+        # tuple — findings may depend on model-only genes, so the memo key
+        # is the full individual, not the structural key)
+        pruned: Dict[int, list] = {}             # generation idx -> findings
+        if lint is not None:
+            for i, (genes, plan) in enumerate(zip(generation, plans)):
+                gk = tuple(genes)
+                findings = lint_memo.get(gk)
+                if findings is None:
+                    findings = list(lint(plan) or ())
+                    lint_memo[gk] = findings
+                if any(getattr(f, "severity", None) == "error"
+                       for f in findings):
+                    pruned[i] = findings
+            cache.stats.static_pruned += len(pruned)
+
         payloads: Dict[str, dict] = {}
         todo: Dict[str, tuple] = {}              # hash -> (key, plan)
-        for h, key, plan in zip(hashes, keys, plans):
-            if h in payloads or h in todo:
+        for i, (h, key, plan) in enumerate(zip(hashes, keys, plans)):
+            if i in pruned or h in payloads or h in todo:
                 continue
             payload = cache.lookup(key, count=False)
             if payload is not None:
@@ -376,15 +407,24 @@ def make_cached_batch_evaluator(
             with ThreadPoolExecutor(max_workers=n) as ex:
                 for h, payload in zip(todo, ex.map(build, todo.values())):
                     payloads[h] = payload
-        # per-candidate accounting: every candidate that did not pay for
-        # its own compile is a hit (put/put_failure counted the misses)
-        cache.stats.hits += len(generation) - len(todo)
-        for h, key in zip(hashes, keys):
-            if h not in todo and cache.from_disk(key):
+        # per-candidate accounting: every non-pruned candidate that did not
+        # pay for its own compile is a hit (put/put_failure counted the
+        # misses; statically pruned candidates never enter the cache)
+        cache.stats.hits += len(generation) - len(pruned) - len(todo)
+        for i, (h, key) in enumerate(zip(hashes, keys)):
+            if i not in pruned and h not in todo and cache.from_disk(key):
                 cache.stats.disk_hits += 1
 
         out = []
-        for h, key, plan in zip(hashes, keys, plans):
+        for i, (h, key, plan) in enumerate(zip(hashes, keys, plans)):
+            if i in pruned:
+                out.append(Evaluation(
+                    time_s=float("inf"), correct=False,
+                    info={"static_pruned": True,
+                          "static_findings": [
+                              f.to_dict() if hasattr(f, "to_dict") else f
+                              for f in pruned[i]]}))
+                continue
             payload = payloads[h]
             if "error" in payload:
                 out.append(Evaluation(time_s=float("inf"), correct=False,

@@ -9,11 +9,10 @@ structure to learn and training loss visibly decreases.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclass

@@ -14,7 +14,7 @@ import jax
 import numpy as np
 
 try:                                        # jax >= 0.5.1
-    from jax.sharding import AxisType
+    from jax.sharding import AxisType as AxisType    # re-exported
     _HAS_AXIS_TYPES = True
 except ImportError:
     _HAS_AXIS_TYPES = False

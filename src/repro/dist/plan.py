@@ -137,3 +137,23 @@ CROSS_POD_COMPRESSED = Plan(name="cross-pod-compressed",
                             grad_compression=True)
 SERVE_LOW_MEM = Plan(name="serve-low-mem", remat="none", kv_cache_quant=True,
                      decode_kv_seq_shard=True)
+
+NAMED_PLANS = {p.name: p for p in (TRAIN_TIGHT_MEM, CROSS_POD_COMPRESSED,
+                                   SERVE_LOW_MEM)}
+
+# Documented deployment context per named plan: the mesh kind and shape
+# cells the plan is designed for.  ``repro.analysis.lint`` audits each named
+# plan against exactly this context (a plan the linter proves infeasible on
+# its documented mesh is a bug in the plan, not a waivable finding):
+#   * train-tight-mem     — a training plan; grad accumulation + full remat
+#     target the multi-pod training footprint.
+#   * cross-pod-compressed — compresses the cross-pod grad psum, so it only
+#     means anything on the multi-pod mesh.
+#   * serve-low-mem       — a decode plan for the single-pod serving mesh
+#     (long_500k applies only to sub-quadratic archs, see cell_runnable).
+PLAN_CONTEXTS = {
+    "train-tight-mem": {"mesh": "multi", "shapes": ("train_4k",)},
+    "cross-pod-compressed": {"mesh": "multi", "shapes": ("train_4k",)},
+    "serve-low-mem": {"mesh": "single",
+                      "shapes": ("decode_32k", "long_500k")},
+}

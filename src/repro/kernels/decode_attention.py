@@ -54,8 +54,8 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
 
     @pl.when(ki == n_kv - 1)
     def _done():
-        l = jnp.maximum(l_ref[0], 1e-20)
-        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)[0]
+        denom = jnp.maximum(l_ref[0], 1e-20)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)[0]
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, block_kv: int = 512,

@@ -55,8 +55,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ki == n_kv - 1)
     def _done():
-        l = jnp.maximum(l_ref[...], 1e-20)
-        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        denom = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -132,6 +132,20 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     plan = default_plan(cfg, shape, plan_name, overrides)
     result["plan_detail"] = dataclasses.asdict(plan)
 
+    # static plan lint (repro.analysis): findings ride the cell JSON so a
+    # sweep over cells doubles as a lint sweep; an error-severity finding
+    # prunes the cell before any lowering or XLA compile is spent on it
+    from repro.analysis import findings_to_json, has_errors, lint_plan
+    pipelined = bool(overrides and "pipeline_schedule" in overrides)
+    lint = lint_plan(plan, mesh=mesh, cfg=cfg, shape=shape,
+                     pipelined=pipelined)
+    result["lint"] = findings_to_json(lint)
+    if has_errors(lint):
+        result["error"] = "statically pruned: " + "; ".join(
+            f"{f.rule_id}: {f.message}" for f in lint
+            if f.severity == "error")
+        return result
+
     # structure-keyed compile cache: cells whose plans differ only in
     # model-only genes (e.g. --schedule variants of the same baseline)
     # share one compiled artifact, and repeat invocations skip XLA entirely
@@ -187,7 +201,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     # --plan-json): the baseline step is data-parallel over "pod", and the
     # default Plan genes must not shift every cached multi-mesh roofline
     pipe_ranks = mesh.shape["pod"] if "pod" in mesh.axis_names else 1
-    pipelined = bool(overrides and "pipeline_schedule" in overrides)
     bubble = (cost_model.plan_bubble_fraction(plan, pipe_ranks)
               if pipelined else 0.0)
     rl = cost_model.roofline_terms(

@@ -26,7 +26,6 @@ if os.environ.get("REPRO_TPU"):
         "LIBTPU_INIT_ARGS", "") + " " + TPU_XLA_FLAGS
 
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -11,7 +11,6 @@ which keeps the HBM bytes in §Roofline honest.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -237,7 +236,7 @@ def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
         qpos = q_offset + qi * block_q + jnp.arange(block_q)
 
         def kv_step(carry, inputs):
-            m, l, acc = carry
+            m, lsum, acc = carry
             ki, kblk, vblk = inputs
             kpos = ki * block_kv + jnp.arange(block_kv)
             s = jnp.einsum("bqgrd,bkgd->bgrqk", qblk, kblk)
@@ -253,7 +252,7 @@ def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
             p = jnp.exp(s - m_new[..., None])
             p = jnp.where(mask[None, None, None], p, 0.0)
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p.sum(axis=-1)
+            l_new = lsum * corr + p.sum(axis=-1)
             pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(qblk.dtype), vblk)
             acc_new = acc * corr[..., None].astype(acc.dtype) + pv
             return (m_new, l_new, acc_new), None
@@ -261,11 +260,11 @@ def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
         m0 = jnp.full((b, kvh, rep, block_q), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, kvh, rep, block_q), jnp.float32)
         a0 = jnp.zeros((b, kvh, rep, block_q, dh), qblk.dtype)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lsum, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0),
             (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
-        l = jnp.maximum(l, 1e-20)
-        out = acc / l[..., None].astype(acc.dtype)   # [b,g,r,q,dh]
+        lsum = jnp.maximum(lsum, 1e-20)
+        out = acc / lsum[..., None].astype(acc.dtype)   # [b,g,r,q,dh]
         return jnp.moveaxis(out, 3, 1)               # [b,q,g,r,dh]
 
     out = jax.lax.map(lambda args: q_block(*args),

@@ -637,9 +637,9 @@ def cache_axes(cfg: ModelConfig, quant: bool = False) -> Params:
     def kvbuf_plain(*lead):
         return {"k": tuple(lead) + ("batch", "kv_seq", "kv_heads", None),
                 "v": tuple(lead) + ("batch", "kv_seq", "kv_heads", None)}
-    rec_axes = lambda *lead: {
-        "conv": tuple(lead) + ("batch", None, "lru"),
-        "h": tuple(lead) + ("batch", None, "lru")}
+    def rec_axes(*lead):
+        return {"conv": tuple(lead) + ("batch", None, "lru"),
+                "h": tuple(lead) + ("batch", None, "lru")}
     fam = cfg.family
     if fam in ("dense", "moe"):
         return {"attn": kvbuf("layers")}

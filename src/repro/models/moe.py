@@ -22,7 +22,6 @@ def init_moe(key, cfg, dtype):
     m = cfg.moe
     d = cfg.d_model
     ks = jax.random.split(key, 4)
-    gated = cfg.ffn_act in ("swiglu", "geglu")
     ek = jax.random.split(ks[1], m.n_experts)
     experts = jax.vmap(
         lambda k: layers.init_ffn(k, d, m.d_expert, cfg.ffn_act, False, dtype)
@@ -35,7 +34,6 @@ def init_moe(key, cfg, dtype):
     if m.dense_residual:
         p["dense"] = layers.init_ffn(
             ks[3], d, m.dense_d_ff or cfg.d_ff, cfg.ffn_act, False, dtype)
-    del gated
     return p
 
 

@@ -8,7 +8,6 @@ so the MXU does nearly all the FLOPs and the recurrence touches only the
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

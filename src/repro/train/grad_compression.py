@@ -12,7 +12,7 @@ a forced 8-device host platform.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

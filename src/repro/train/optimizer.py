@@ -26,7 +26,10 @@ def lr_schedule(tcfg: TrainConfig, step):
 
 def init(params, tcfg: TrainConfig) -> Dict[str, Any]:
     mdt = jnp.dtype(tcfg.master_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, mdt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, mdt)
+
     state = {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),
@@ -40,8 +43,6 @@ def init(params, tcfg: TrainConfig) -> Dict[str, Any]:
 
 def opt_state_axes(par_axes, tcfg: TrainConfig):
     """Logical axes for the optimizer state (moments mirror params)."""
-    is_ax = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
     state = {
         "m": par_axes,
         "v": par_axes,
@@ -49,7 +50,6 @@ def opt_state_axes(par_axes, tcfg: TrainConfig):
     }
     if tcfg.use_master_copy:
         state["master"] = par_axes
-    del is_ax
     return state
 
 

@@ -14,7 +14,7 @@ applied to the slowest link.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -52,10 +52,10 @@ def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
 
             def acc_step(carry, microbatch):
                 g_acc, l_acc = carry
-                (l, _), g = grad_fn(params, microbatch)
+                (mb_loss, _), g = grad_fn(params, microbatch)
                 g_acc = jax.tree.map(
                     lambda a, b: a + b.astype(a.dtype), g_acc, g)
-                return (g_acc, l_acc + l), None
+                return (g_acc, l_acc + mb_loss), None
 
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                               params)
@@ -119,7 +119,9 @@ def make_pod_parallel_train_step(model: Model, tcfg: TrainConfig,
         if ef is None:
             ef = jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
 
-        rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+        def rep(tree):
+            return jax.tree.map(lambda _: P(), tree)
+
         shard_batch = jax.tree.map(lambda _: P("pod"), batch)
         grads, new_ef, loss, metrics = shard_map(
             pod_body, mesh=mesh,

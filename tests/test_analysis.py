@@ -1,0 +1,535 @@
+"""repro.analysis: static plan/kernel lint + gene-contract audit.
+
+Pins the PR-6 contract: statically infeasible candidates are rejected for
+the GA penalty *before* any trace/compile (the paper's structure analysis
+applied to the framework search), the named plans lint clean on their
+documented contexts, the model-only gene flags are *proved* against the
+traced artifact, and the built-in Pallas kernel contracts hold.
+"""
+import json
+
+import pytest
+
+from repro.analysis import (DEVICE_MEMORY_BYTES, Finding, audit_findings,
+                            audit_gene_space, check_model, has_errors,
+                            lint_kernels, lint_plan, max_severity,
+                            sort_findings)
+from repro.analysis.kernel_lint import KernelModel, OperandSpec
+from repro.configs import get_config, get_shape
+from repro.configs.base import ShapeConfig
+from repro.dist.plan import NAMED_PLANS, PLAN_CONTEXTS, Plan
+
+SINGLE = {"data": 16, "model": 16}
+MULTI = {"pod": 2, "data": 16, "model": 16}
+TRAIN = get_shape("train_4k")
+DECODE = get_shape("decode_32k")
+
+
+def rules(findings, rule_id):
+    return [f for f in findings if f.rule_id == rule_id]
+
+
+# ------------------------------------------------------------- findings API
+def test_finding_severity_ordering_and_json():
+    fs = [Finding("P999", "info", "i"), Finding("P998", "error", "e"),
+          Finding("P997", "warning", "w")]
+    assert [f.severity for f in sort_findings(fs)] == \
+        ["error", "warning", "info"]
+    assert has_errors(fs) and max_severity(fs) == "error"
+    assert max_severity([]) is None
+    d = Finding("P001", "error", "m", plan_field="remat", subject="p",
+                context={"x": 1}).to_dict()
+    assert d == {"rule_id": "P001", "severity": "error", "message": "m",
+                 "plan_field": "remat", "subject": "p", "context": {"x": 1}}
+    json.dumps(d)                              # JSON-clean by construction
+
+
+# --------------------------------------------------------------- plan lint
+def test_default_plan_lints_clean_on_train_cell():
+    cfg = get_config("granite-3-2b")
+    out = lint_plan(Plan(), mesh=SINGLE, cfg=cfg, shape=TRAIN)
+    assert not has_errors(out)
+    assert not any(f.severity == "warning" for f in out)
+
+
+def test_p001_nonpositive_gene_short_circuits():
+    import dataclasses
+    bad = dataclasses.replace(Plan(), microbatches=0, vocab_chunk=-1)
+    out = lint_plan(bad, mesh=SINGLE, cfg=get_config("granite-3-2b"),
+                    shape=TRAIN)
+    assert out and all(f.rule_id == "P001" for f in out)
+    assert {f.plan_field for f in out} == {"microbatches", "vocab_chunk"}
+
+
+def test_p002_microbatch_divisibility_is_an_error_on_train_only():
+    import dataclasses
+    plan = dataclasses.replace(Plan(), microbatches=3)   # 256 % 3 != 0
+    out = lint_plan(plan, shape=TRAIN)
+    assert [f.severity for f in rules(out, "P002")] == ["error"]
+    # same plan on a decode shape: the gene is inert, not fatal
+    out = lint_plan(plan, shape=DECODE)
+    assert not rules(out, "P002") and not has_errors(out)
+    assert any(f.plan_field == "microbatches" for f in rules(out, "P103"))
+    # a dividing microbatch count is silent
+    ok = dataclasses.replace(Plan(), microbatches=4)
+    assert not rules(lint_plan(ok, shape=TRAIN), "P002")
+
+
+def test_p003_unknown_schedule_severity_follows_pipelined():
+    import dataclasses
+    plan = dataclasses.replace(Plan(), pipeline_schedule="zb-h1")
+    assert [f.severity for f in rules(lint_plan(plan), "P003")] \
+        == ["warning"]
+    out = lint_plan(plan, mesh=MULTI, pipelined=True)
+    assert [f.severity for f in rules(out, "P003")] == ["error"]
+    assert has_errors(out)
+
+
+def test_p004_unhostable_registered_schedule():
+    from repro.dist import schedules as sch
+
+    class NeverHosts(sch.Schedule):
+        name = "never-hosts"
+
+        def build(self, **kw):
+            return None
+
+    sch.register_schedule(NeverHosts())
+    try:
+        import dataclasses
+        plan = dataclasses.replace(Plan(), pipeline_schedule="never-hosts")
+        out = lint_plan(plan, mesh=MULTI, pipelined=True)
+        assert [f.severity for f in rules(out, "P004")] == ["error"]
+        assert not rules(out, "P003")          # registered, so not unknown
+    finally:
+        del sch.SCHEDULES["never-hosts"]
+
+
+def test_p005_p006_p007_pipeline_shape_notes():
+    import dataclasses
+    plan = dataclasses.replace(Plan(), virtual_stages=2)   # gpipe ignores it
+    out = lint_plan(plan, mesh=SINGLE, pipelined=True)
+    assert rules(out, "P006") and rules(out, "P005")
+    # pod axis present, microbatches < ranks: bubble note with the fraction
+    plan = dataclasses.replace(Plan(), microbatches=1)
+    out = lint_plan(plan, mesh=MULTI, shape=TRAIN, pipelined=True)
+    (f,) = rules(out, "P007")
+    assert f.context["bubble_fraction"] > 0
+    assert not has_errors(out)
+
+
+def test_p008_state_floor_overflows_a_single_device():
+    cfg = get_config("granite-3-2b")        # ~2.5B params
+    out = lint_plan(Plan(), mesh={"data": 1}, cfg=cfg, shape=TRAIN)
+    (f,) = rules(out, "P008")
+    assert f.severity == "error"
+    assert f.context["state_bytes"] > f.context["capacity_bytes"]
+    # the production mesh holds it with room to spare
+    assert not rules(lint_plan(Plan(), mesh=SINGLE, cfg=cfg, shape=TRAIN),
+                     "P008")
+    # a raised per-device capacity clears the same cell
+    assert not rules(lint_plan(Plan(), mesh={"data": 1}, cfg=cfg,
+                               shape=TRAIN,
+                               device_memory_bytes=64 * DEVICE_MEMORY_BYTES),
+                     "P008")
+
+
+def test_p009_vocab_chunk_silent_disable():
+    import dataclasses
+    shape = ShapeConfig("t", seq_len=1000, global_batch=8, kind="train")
+    plan = dataclasses.replace(Plan(), vocab_chunk=512)   # 1000 % 512 != 0
+    assert [f.severity for f in rules(lint_plan(plan, shape=shape), "P009")] \
+        == ["warning"]
+    assert not rules(lint_plan(plan, shape=TRAIN), "P009")  # 4096 % 512 == 0
+
+
+def test_p010_batch_prefix_sharding():
+    shape = ShapeConfig("t", 128, 6, "train")       # 6 % 16 != 0
+    out = lint_plan(Plan(), mesh=SINGLE, shape=shape)
+    assert [f.severity for f in rules(out, "P010")] == ["warning"]
+    # partial prefix: 2 % pod(2) == 0 but 2 % (pod*data) != 0 -> info
+    shape = ShapeConfig("t", 128, 2, "train")
+    assert [f.severity
+            for f in rules(lint_plan(Plan(), mesh=MULTI, shape=shape),
+                           "P010")] == ["info"]
+    # full prefix and singleton batch are both silent
+    assert not rules(lint_plan(Plan(), mesh=MULTI, shape=TRAIN), "P010")
+    one = ShapeConfig("t", 128, 1, "decode")
+    assert not rules(lint_plan(Plan(), mesh=SINGLE, shape=one), "P010")
+
+
+def test_p012_decode_kv_shard_replication():
+    import dataclasses
+    plan = dataclasses.replace(Plan(), decode_kv_seq_shard=True)
+    shape = ShapeConfig("d", 1000, 8, "decode")     # 1000 % 16 != 0
+    assert rules(lint_plan(plan, mesh=SINGLE, shape=shape), "P012")
+    assert not rules(lint_plan(plan, mesh=SINGLE, shape=DECODE), "P012")
+    # inert on train: P013 note instead
+    assert rules(lint_plan(plan, mesh=SINGLE, shape=TRAIN), "P013")
+
+
+def test_named_plans_lint_clean_on_documented_contexts():
+    """Acceptance (satellite 2): every named plan on its documented mesh and
+    shapes carries no error- or warning-severity findings."""
+    from repro.analysis.lint import PRODUCTION_MESHES
+    from repro.configs import ARCHS, cell_runnable
+
+    for name, plan in NAMED_PLANS.items():
+        ctx = PLAN_CONTEXTS[name]
+        mesh = PRODUCTION_MESHES[ctx["mesh"]]
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            for shape_name in ctx["shapes"]:
+                shape = get_shape(shape_name)
+                if not cell_runnable(cfg, shape):
+                    continue
+                out = lint_plan(plan, mesh=mesh, cfg=cfg, shape=shape)
+                bad = [f for f in out if f.severity != "info"]
+                assert not bad, (name, arch, shape_name,
+                                 [f.to_dict() for f in bad])
+
+
+# -------------------------------------------------------------- kernel lint
+def test_builtin_kernels_lint_without_errors():
+    out = lint_kernels()
+    assert out                                   # padding/accum notes exist
+    assert not has_errors(out), [f.to_dict() for f in out
+                                 if f.severity == "error"]
+    # the declared accumulations are surfaced, not flagged
+    assert any(f.rule_id == "K003" and f.severity == "info" for f in out)
+
+
+def test_kernel_wrapper_asserts_become_k001_errors():
+    from repro.analysis.kernel_lint import (decode_attention_model,
+                                            flash_attention_model,
+                                            tdfir_model)
+    model, errs = flash_attention_model(sq=1000, block_q=512)  # 1000 % 512
+    assert model is None and [f.rule_id for f in errs] == ["K001"]
+    model, errs = decode_attention_model(s=1000, block_kv=512)
+    assert model is None and has_errors(errs)
+    model, errs = tdfir_model(n=8, k=16, block_n=8)            # bn < taps
+    assert model is None and has_errors(errs)
+
+
+def _model(grid, out_map, accum=(), in_map=None, dims=(64, 64),
+           block=(32, 32)):
+    in_map = in_map or out_map
+    return KernelModel(
+        name="t", grid=grid,
+        inputs=[OperandSpec("a", dims, block, in_map)],
+        output=OperandSpec("o", dims, block, out_map), accum_dims=accum)
+
+
+def test_k001_non_dividing_block_is_an_error():
+    m = _model((2, 2), lambda i, j: (i, j), dims=(64, 60))  # 60 % 32 != 0
+    out = check_model(m)
+    assert any(f.rule_id == "K001" and f.severity == "error" for f in out)
+
+
+def test_k002_out_of_bounds_index_map():
+    m = _model((2, 2), lambda i, j: (i, j),
+               in_map=lambda i, j: (i + 1, j))     # i=1 -> block 2 of 2
+    out = check_model(m)
+    assert any(f.rule_id == "K002" and f.severity == "error" for f in out)
+    # a raising map is also a K002, not a crash
+    def boom(i, j):
+        raise ValueError("bad map")
+    out = check_model(_model((2, 2), lambda i, j: (i, j), in_map=boom))
+    assert any(f.rule_id == "K002" for f in out)
+
+
+def test_k003_undeclared_and_non_trailing_accumulation():
+    # output ignores the trailing grid dim but declares no accumulation
+    m = _model((2, 2), lambda i, j: (i, 0))
+    out = check_model(m)
+    assert any(f.rule_id == "K003" and f.severity == "error"
+               and "declares no" in f.message for f in out)
+    # declaring it turns the hazard into an info note
+    m = _model((2, 2), lambda i, j: (i, 0), accum=(1,))
+    out = check_model(m)
+    assert [f.severity for f in rules(out, "K003")] == ["info"]
+    # revisits across a NON-trailing dim are unsound even if declared
+    m = _model((2, 2), lambda i, j: (0, j), accum=(0,))
+    out = check_model(m)
+    assert any(f.rule_id == "K003" and f.severity == "error"
+               and "trailing" in f.message for f in out)
+
+
+# -------------------------------------------------------------- gene audit
+@pytest.fixture(scope="module")
+def audit_trace_fn():
+    from repro.analysis.gene_audit import default_trace_fn
+    return default_trace_fn()
+
+
+def test_model_only_genes_are_artifact_invariant(audit_trace_fn):
+    """Acceptance: audit_gene_space() proves both structural=False genes
+    never change the traced artifact — the search-cache identity is sound."""
+    audits = audit_gene_space(trace_fn=audit_trace_fn)
+    assert {a.field for a in audits} == {"pipeline_schedule",
+                                         "virtual_stages"}
+    for a in audits:
+        assert a.declared_model_only and a.artifact_invariant
+        assert not a.violation and a.checked_values
+    fs = audit_findings(audits)
+    assert [f.rule_id for f in fs] == ["G002", "G002"]
+    assert not has_errors(fs)
+
+
+def test_mislabeled_structural_gene_is_caught(audit_trace_fn):
+    """Acceptance: inject a gene space where a genuinely structural gene
+    (remat reaches the traced train step) is flagged model-only — the audit
+    must detect the unsound cache identity."""
+    from repro.dist.plan import Gene
+    bad_space = [Gene("remat", ("none", "block", "full"), structural=False)]
+    (a,) = audit_gene_space(trace_fn=audit_trace_fn, gene_space=bad_space)
+    assert a.declared_model_only and not a.artifact_invariant
+    assert a.violation and "changes the artifact" in a.detail
+    (f,) = audit_findings([a])
+    assert f.rule_id == "G001" and f.severity == "error"
+
+
+def test_structural_gene_audit_reports_g003(audit_trace_fn):
+    # auditing a correctly-labeled structural gene: G003, never an error
+    (a,) = audit_gene_space(trace_fn=audit_trace_fn, fields=["remat"])
+    assert not a.declared_model_only and not a.artifact_invariant
+    assert not a.violation
+    (f,) = audit_findings([a])
+    assert f.rule_id == "G003" and f.severity == "info"
+
+
+# ----------------------------------------- prune-before-compile (evaluator)
+from repro.core import search_cache as sc  # noqa: E402
+from repro.core.ga import Evaluation, GAConfig, run_ga  # noqa: E402
+from test_search_cache import genes_with, make_evaluator  # noqa: E402
+
+# batch=6: microbatches gene values 4 and 8 are statically infeasible
+# (6 % 4, 6 % 8), 1 and 2 are fine — a population the linter can split
+SHAPE_B6 = ShapeConfig("b6", seq_len=32, global_batch=6, kind="train")
+SHAPE_B8 = ShapeConfig("b8", seq_len=32, global_batch=8, kind="train")
+
+
+def lint_for(shape):
+    return lambda plan: lint_plan(plan, shape=shape)
+
+
+def test_evaluator_prunes_infeasible_without_tracing():
+    counter = {"lowers": 0, "compiles": 0}
+    cache = sc.SearchCache()
+    ev = make_evaluator(cache, counter, lint=lint_for(SHAPE_B6))
+    evs = ev([genes_with(), genes_with(microbatches=4),
+              genes_with(microbatches=8)])
+    assert counter["compiles"] == 1             # only the feasible candidate
+    assert counter["lowers"] == 1
+    assert evs[0].correct
+    for e in evs[1:]:
+        assert not e.correct and e.info["static_pruned"]
+        assert e.info["static_findings"][0]["rule_id"] == "P002"
+    assert cache.stats.static_pruned == 2
+    assert cache.stats.candidates == 3
+    assert cache.stats.to_dict()["static_pruned"] == 2
+    # pruned candidates are not hits: only the feasible one was scored
+    assert cache.stats.hits == 0 and cache.stats.misses == 1
+
+
+def test_lint_verdicts_are_memoized_per_individual():
+    calls = {"n": 0}
+
+    def counting_lint(plan):
+        calls["n"] += 1
+        return lint_plan(plan, shape=SHAPE_B6)
+
+    counter = {"lowers": 0, "compiles": 0}
+    ev = make_evaluator(sc.SearchCache(), counter, lint=counting_lint)
+    gen = [genes_with(microbatches=4), genes_with()]
+    ev(gen)
+    ev(gen)                                     # second generation: memo
+    assert calls["n"] == 2
+
+
+def test_ga_with_linter_spends_strictly_less_xla_work_same_selection():
+    """Acceptance: same GA, same seed, a population containing statically
+    infeasible candidates — the linted run attempts strictly fewer
+    trace/lower calls (the infeasible ones fail at trace time, exactly like
+    ``_split_microbatches``' assert), selects the identical winner, and the
+    prunes are visible in the GA history."""
+    from repro.core.measure import CompiledCostRunner
+    from test_search_cache import FakeLowered
+
+    cards = Plan.gene_cardinalities()
+    cfg = GAConfig(population=8, generations=4, seed=3, cardinalities=cards)
+
+    def run(lint):
+        counter = {"lowers": 0, "compiles": 0}
+
+        def lower_plan(plan):               # faithful: infeasible plans
+            counter["lowers"] += 1          # die at trace, before compile
+            assert SHAPE_B6.global_batch % plan.microbatches == 0
+            return FakeLowered(counter)
+
+        ev = sc.make_cached_batch_evaluator(
+            lower_plan, CompiledCostRunner(n_chips=1), sc.SearchCache(),
+            key_extra=("test",), pipe_ranks=2, lint=lint)
+        res = run_ga(len(cards), ev.evaluate, cfg, evaluate_batch=ev)
+        return counter, res, ev.cache.stats
+
+    base_counter, base_res, _ = run(None)
+    lint_counter, lint_res, stats = run(lint_for(SHAPE_B6))
+    assert stats.static_pruned > 0
+    # both runs see the same fitness landscape (infeasible == penalty either
+    # way), so the trajectories match — the linted one just never pays the
+    # trace for what it can reject arithmetically
+    assert lint_counter["lowers"] < base_counter["lowers"]
+    assert lint_counter["compiles"] == base_counter["compiles"]
+    assert lint_res.best_genes == base_res.best_genes
+    assert sum(h["n_pruned"] for h in lint_res.history) > 0
+    # the winner is a genuinely feasible plan
+    best = Plan.from_genes(list(lint_res.best_genes))
+    assert not has_errors(lint_plan(best, shape=SHAPE_B6))
+    assert lint_res.best_eval.correct
+
+
+def test_ga_with_linter_identical_on_all_feasible_population():
+    """Acceptance: when nothing is infeasible (batch divides every
+    microbatch gene) the linter changes no outcome and no compile count."""
+    cards = Plan.gene_cardinalities()
+    cfg = GAConfig(population=8, generations=4, seed=5, cardinalities=cards)
+
+    def run(lint):
+        counter = {"lowers": 0, "compiles": 0}
+        ev = make_evaluator(sc.SearchCache(), counter, lint=lint)
+        res = run_ga(len(cards), ev.evaluate, cfg, evaluate_batch=ev)
+        return counter, res, ev.cache.stats
+
+    base_counter, base_res, _ = run(None)
+    lint_counter, lint_res, stats = run(lint_for(SHAPE_B8))
+    assert stats.static_pruned == 0
+    assert lint_counter["compiles"] == base_counter["compiles"]
+    assert lint_res.best_genes == base_res.best_genes
+    assert lint_res.best_eval.effective_time == \
+        base_res.best_eval.effective_time
+
+
+# ------------------------------------------------- prune in the loop GA
+def test_loop_ga_lint_choice_prunes_without_measuring():
+    from repro.backends.builtin import MANY_CORE
+    from repro.core.loop_offload import ga_search
+
+    class Nest:
+        def __init__(self, name, impls):
+            self.name = name
+            self.impls = impls
+
+    class App:
+        name = "lint-app"
+        nests = [Nest("a", {"dp": None, "seq": None}),
+                 Nest("b", {"dp": None, "seq": None})]
+
+        def build(self, choice):
+            return dict(choice)
+
+    class CountingRunner:
+        def __init__(self):
+            self.calls = []
+
+        def measure(self, fn, inputs, ref_out):
+            self.calls.append(dict(fn))
+            return Evaluation(time_s=1.0, correct=True)
+
+    def lint_choice(choice):
+        # statically reject any pattern offloading nest "a"
+        if choice.get("a") == "dp":
+            return [Finding("X001", "error", "nest a cannot offload")]
+        return []
+
+    runner = CountingRunner()
+    res = ga_search(App(), MANY_CORE, runner, inputs=None, ref_out=None,
+                    ga_cfg=GAConfig(population=4, generations=4, seed=0),
+                    lint_choice=lint_choice)
+    assert res.cache_stats["static_pruned"] >= 1
+    assert all(c.get("a") != "dp" for c in runner.calls)   # never measured
+    assert res.best_choice.get("a") != "dp"
+    assert res.best_correct
+    assert res.cache_stats["measured"] == len(runner.calls)
+
+
+def test_fpga_search_lint_prunes_candidate_slots():
+    import jax
+    from repro.apps import APPS
+    from repro.core.destinations import FPGA
+    from repro.core.loop_offload import fpga_search
+    from repro.core.measure import TimedRunner
+
+    app = APPS["3mm"]()
+    st = app.make_inputs(seed=0, small=True)
+    ref = jax.jit(app.reference_fn())(st)
+
+    def lint_choice(choice):
+        if choice.get("mm1_E_AB") == "pallas":
+            return [Finding("X001", "error", "mm1 statically rejected")]
+        return []
+
+    res = fpga_search(app, FPGA, TimedRunner(repeats=1), st, ref, st,
+                      lint_choice=lint_choice)
+    assert res.cache_stats["static_pruned"] >= 1
+    assert res.best_choice.get("mm1_E_AB") != "pallas"
+    assert res.n_measurements <= 4
+
+
+# ------------------------------------------------------------------- CLI
+def test_lint_cli_clean_and_writes_report(tmp_path, capsys):
+    from repro.analysis.lint import main
+    out = tmp_path / "findings.json"
+    rc = main(["--no-gene-audit", "--strict", "--json", str(out)])
+    assert rc == 0, capsys.readouterr().out
+    report = json.loads(out.read_text())
+    assert report["cells"] > 0
+    assert report["severity_counts"]["error"] == 0
+    assert report["severity_counts"]["warning"] == 0
+    assert report["strict"] is True
+    assert isinstance(report["kernel_and_gene_findings"], list)
+
+
+def test_lint_cli_exits_nonzero_on_infeasible_what_if(capsys):
+    from repro.analysis.lint import main
+    # train-tight-mem (microbatches=4) forced onto a decode cell with
+    # --pipelined on the single mesh: P005 warning -> strict fails
+    rc = main(["--plan", "train-tight-mem", "--shape", "decode_32k",
+               "--mesh", "single", "--pipelined", "--strict",
+               "--no-gene-audit", "--no-kernel-lint"])
+    assert rc == 1
+    assert "[warning]" in capsys.readouterr().out
+
+
+def test_lint_cli_unknown_plan_fails():
+    from repro.analysis.lint import main
+    with pytest.raises(SystemExit):
+        main(["--plan", "no-such-plan", "--no-gene-audit",
+              "--no-kernel-lint"])
+
+
+# ------------------------------------------------------------- dryrun cell
+def test_dryrun_cell_is_statically_pruned_before_compile():
+    """An infeasible plan reaches the cell JSON as lint findings + error
+    WITHOUT spending a lower/compile (subprocess: dryrun forces the
+    512-device XLA flag at import)."""
+    import os
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.launch.dryrun import run_cell
+res = run_cell("granite-3-2b", "train_4k", "single",
+               overrides={{"microbatches": 3}}, use_cache=False)
+assert "statically pruned" in res["error"], res
+assert any(f["rule_id"] == "P002" for f in res["lint"]), res["lint"]
+assert "compile_s" not in res and "roofline" not in res, sorted(res)
+print("ok")
+""".format(src=os.path.abspath(src))
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "ok" in proc.stdout

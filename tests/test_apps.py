@@ -1,10 +1,9 @@
 """Paper apps: correctness of destination impls + the many-core hazard."""
 import jax
-import numpy as np
 import pytest
 
 from repro.apps import APPS
-from repro.core.destinations import MANY_CORE, GPU, FPGA
+from repro.core.destinations import MANY_CORE, FPGA
 from repro.core.ga import GAConfig
 from repro.core.loop_offload import ga_search, fpga_search
 from repro.core.measure import TimedRunner, outputs_close

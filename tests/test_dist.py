@@ -65,7 +65,6 @@ def test_rules_specs_on_single_device_mesh(mesh):
 
 
 def test_rules_divisibility_replicates(mesh):
-    rules = Rules(mesh, Plan())
     # 1-device mesh divides everything; fake a bigger axis via dims=odd
     # against a 2-wide axis on a (1,1) mesh is moot, so check the rule
     # directly: a dim not divisible by the axis product falls back

@@ -1,7 +1,5 @@
 """Multi-device behaviour on a forced 8-device host (subprocess per test so
 the main pytest process keeps exactly 1 device, per the task spec)."""
-import pytest
-
 from helpers import run_multidevice
 
 

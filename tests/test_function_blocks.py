@@ -1,13 +1,12 @@
 """Function-block discovery: DB name matching + Deckard-style similarity."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")   # minimal envs: skip, don't fail collect
 from hypothesis import given, settings, strategies as st
 
-from repro.apps import APPS, registry
+from repro.apps import APPS
 from repro.core import jaxpr_tools
 from repro.core.function_blocks import detect, apply_matches
 from repro.core.measure import outputs_close

@@ -1,6 +1,4 @@
 """GA engine: paper-exact behaviour + hypothesis invariants."""
-import math
-
 import pytest
 
 pytest.importorskip("hypothesis")   # minimal envs: skip, don't fail collect

@@ -1,7 +1,6 @@
 """Loop-aware HLO analyzer: flops within tolerance of analytic counts."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core.hlo_analysis import analyze_hlo

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS
-from repro.models.lm import Model, init_cache
+from repro.models.lm import Model
 
 FAMS = ["granite-3-2b",          # dense GQA
         "h2o-danube-1.8b",       # SWA

@@ -1,6 +1,4 @@
 """Substrate: optimizer, data pipeline, checkpointing, fault tolerance."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +8,7 @@ pytest.importorskip("hypothesis")   # minimal envs: skip, don't fail collect
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.configs.base import TrainConfig, ShapeConfig
+from repro.configs.base import TrainConfig
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.runtime.fault_tolerance import (StragglerWatchdog, run_resilient)
 from repro.train import optimizer
