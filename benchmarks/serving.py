@@ -1,0 +1,170 @@
+"""Serving benchmark: continuous vs static batching on an open-loop trace.
+
+The same staggered-arrival request trace is served two ways on one virtual
+tick timeline (repro.serve.ContinuousBatcher's deterministic clock):
+
+  * **continuous** — requests are admitted the tick they arrive and join
+    the running decode batch at decode-step granularity;
+  * **static** — the gang-scheduled baseline (what ``launch.serve`` did
+    before repro.serve): no request starts until the *last* arrival, then
+    all decode in lock-step.  Modeled here by gating every admission at
+    the trace's final arrival time on the same engine, so the comparison
+    shares one clock, one model, one slot pool.
+
+Emits ``BENCH_serving.json`` (a CI artifact next to BENCH_search.json /
+BENCH_energy.json) with tok/s, p50/p95 TTFT and joules/request for both
+modes, and exits 1 when an invariant breaks:
+
+  * continuous batching must beat static batching on tok/s for a staggered
+    trace (the whole point of admitting at tick granularity);
+  * the jitted decode step must have traced exactly once per engine;
+  * every request must complete with exactly ``max_gen`` tokens.
+
+    PYTHONPATH=src python benchmarks/serving.py [--out BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+ARCH = "granite-3-2b"
+
+
+def run_mode(model, params, reqs, *, n_slots, cache_len, gate_s=None):
+    """Serve one copy of the trace; ``gate_s`` delays every admission to
+    that time (the static-batching gang gate) while submit timestamps —
+    and therefore TTFT — stay at the true arrivals."""
+    from repro.power import GENERIC
+    from repro.serve import ContinuousBatcher
+
+    engine = ContinuousBatcher(model, params, n_slots=n_slots,
+                               cache_len=cache_len, envelope=GENERIC)
+    gated = reqs
+    if gate_s is not None:
+        gated = [dataclasses.replace(r, arrival_s=max(r.arrival_s, gate_s))
+                 for r in reqs]
+        for g, r in zip(gated, reqs):
+            # TTFT is measured from the true arrival, not the gang gate
+            engine.metrics.on_submit(g.rid, r.arrival_s)
+    t0 = time.perf_counter()
+    out = engine.run(gated)
+    wall = time.perf_counter() - t0
+    s = engine.metrics.summary()
+    s["wall_s"] = wall
+    s["traces"] = dict(engine.traces)
+    return engine, out, s
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--arch", default=ARCH)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--gap-ticks", type=float, default=3.0,
+                    help="arrival spacing in decode ticks (staggered trace)")
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models.lm import Model
+    from repro.serve import Request
+    from repro.serve.batching import DEFAULT_TICK_S, synth_tokens
+
+    cfg = get_config(args.arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache_len = args.prompt_len + args.gen
+
+    gap_s = args.gap_ticks * DEFAULT_TICK_S
+    reqs = [Request(rid=f"r{i}", arch=cfg.name,
+                    prompt_len=args.prompt_len, max_gen=args.gen,
+                    arrival_s=i * gap_s,
+                    tokens=synth_tokens(f"r{i}", args.prompt_len,
+                                        cfg.vocab_size))
+            for i in range(args.requests)]
+    last_arrival = max(r.arrival_s for r in reqs)
+
+    failures = []
+    modes = {}
+    outputs = {}
+    for mode, gate in (("continuous", None), ("static", last_arrival)):
+        engine, out, summary = run_mode(
+            model, params, reqs, n_slots=args.slots, cache_len=cache_len,
+            gate_s=gate)
+        modes[mode] = summary
+        outputs[mode] = out
+        if summary["traces"]["decode_step"] != 1:
+            failures.append(f"{mode}: decode step traced "
+                            f"{summary['traces']['decode_step']}x (want 1)")
+        if summary["completed"] != args.requests:
+            failures.append(f"{mode}: {summary['completed']} of "
+                            f"{args.requests} requests completed")
+        for r in reqs:
+            if len(out.get(r.rid, ())) != r.max_gen:
+                failures.append(f"{mode}: {r.rid} returned "
+                                f"{len(out.get(r.rid, ()))} tokens "
+                                f"(want {r.max_gen})")
+                break
+
+    # greedy decode must not depend on the admission schedule
+    for rid in outputs["continuous"]:
+        if not np.array_equal(outputs["continuous"][rid],
+                              outputs["static"][rid]):
+            failures.append(f"tokens diverge between modes for {rid}")
+            break
+
+    cont, stat = modes["continuous"], modes["static"]
+    if not (cont["tok_per_s"] and stat["tok_per_s"]
+            and cont["tok_per_s"] > stat["tok_per_s"]):
+        failures.append(
+            f"continuous batching does not beat static on tok/s: "
+            f"{cont['tok_per_s']} vs {stat['tok_per_s']}")
+    if not (cont["ttft_p50_s"] and stat["ttft_p50_s"]
+            and cont["ttft_p50_s"] <= stat["ttft_p50_s"]):
+        failures.append(
+            f"continuous batching worsens p50 TTFT: "
+            f"{cont['ttft_p50_s']} vs {stat['ttft_p50_s']}")
+
+    report = {
+        "bench": "serving",
+        "arch": cfg.name,
+        "config": {"requests": args.requests, "slots": args.slots,
+                   "prompt_len": args.prompt_len, "gen": args.gen,
+                   "arrival_gap_s": gap_s, "tick_s": DEFAULT_TICK_S,
+                   "cache_len": cache_len},
+        "modes": modes,
+        "speedup_tok_per_s": (cont["tok_per_s"] / stat["tok_per_s"]
+                              if cont["tok_per_s"] and stat["tok_per_s"]
+                              else None),
+        "failures": failures,
+    }
+    Path(args.out).write_text(json.dumps(report, indent=2))
+    print(json.dumps({k: report[k] for k in
+                      ("bench", "arch", "speedup_tok_per_s", "failures")},
+                     indent=2))
+    for mode in ("continuous", "static"):
+        m = modes[mode]
+        print(f"{mode:11s} tok/s={m['tok_per_s']:.1f} "
+              f"ttft_p50={m['ttft_p50_s']:.3f}s "
+              f"ttft_p95={m['ttft_p95_s']:.3f}s "
+              f"J/req={m['joules_per_request']:.2f}")
+    if failures:
+        print("FAIL:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -66,9 +66,51 @@ def _dtype_bytes(name: str) -> int:
     return _DTYPE_BYTES.get(str(name), 4)
 
 
+def _serve_attr(serve, name, default=None):
+    """Serve-context field: ``serve`` may be a dict or any object carrying
+    n_slots / cache_len / prompt_len / max_gen (e.g. an Endpoint)."""
+    if isinstance(serve, dict):
+        v = serve.get(name, default)
+    else:
+        v = getattr(serve, name, default)
+    return default if v is None else int(v)
+
+
+def serve_kv_bytes(cfg, cache_len: int, *, quant: bool = False) -> int:
+    """Closed-form per-slot decode-cache footprint estimate.
+
+    Mirrors ``models.lm.init_cache`` shapes: attention layers hold K+V of
+    ``[cache_len, n_kv_heads, head_dim]`` each (window rings cap the length
+    at ``cfg.window``); recurrent families hold O(1) state per layer.
+    ``quant`` is the ``Plan.kv_cache_quant`` gene (int8 + fp32 scale).
+    """
+    hd = cfg.head_dim
+    per_tok = 2 * cfg.n_kv_heads * hd          # K + V elements per token
+    el = 1 if quant else _dtype_bytes(getattr(cfg, "dtype", "bfloat16"))
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        return cfg.n_layers * s.d_inner(cfg.d_model) * s.d_state * 4
+    eff = min(cache_len, cfg.window) if getattr(cfg, "window", 0) \
+        else cache_len
+    if cfg.family == "hybrid":
+        h = cfg.hybrid
+        n_att = sum(1 for i in range(cfg.n_layers)
+                    if h.pattern[i % len(h.pattern)] != "recurrent")
+        w = h.lru_width or cfg.d_model
+        rec_state = (cfg.n_layers - n_att) * w * 4
+        return n_att * eff * per_tok * el + rec_state
+    n_att = cfg.n_layers
+    if getattr(cfg, "cross_attn_every", 0):
+        # cross-attn caches are context-length-sized, counted separately by
+        # the caller if it matters; the self-attn share dominates
+        n_att = cfg.n_layers - cfg.n_layers // (cfg.cross_attn_every + 1)
+    return n_att * eff * per_tok * el
+
+
 def lint_plan(plan, *, mesh=None, cfg=None, shape=None,
               pipelined: bool = False,
-              device_memory_bytes: int = DEVICE_MEMORY_BYTES
+              device_memory_bytes: int = DEVICE_MEMORY_BYTES,
+              serve=None
               ) -> List[Finding]:
     """Pure-arithmetic feasibility findings for one plan.
 
@@ -78,6 +120,14 @@ def lint_plan(plan, *, mesh=None, cfg=None, shape=None,
     mirrors ``repro.launch.dryrun``: the pipeline-schedule genes are
     *requested* (not merely carried as model-only genes), so hostability
     failures become errors instead of modeling notes.
+
+    ``serve`` enables the serving context (decode shapes): a dict or object
+    with ``n_slots`` / ``cache_len`` / ``prompt_len`` / ``max_gen``.  The
+    router (repro.serve.router) lints every candidate endpoint with it
+    before scoring, so a destination whose slot pool provably cannot host
+    the request is pruned statically — the same prune-before-compile
+    contract the GA's batch evaluator applies (P018/P019 errors, P104
+    would-fit-with-quant hint).
     """
     out: List[Finding] = []
     subject = getattr(plan, "name", "") or ""
@@ -267,6 +317,52 @@ def lint_plan(plan, *, mesh=None, cfg=None, shape=None,
                 "grad_compression compresses the cross-pod grad psum, but "
                 "the mesh has no pod axis (>1): nothing is compressed",
                 plan_field="grad_compression")
+
+    # --- P018/P019/P104: serving context (decode slot pool) -------------
+    if serve is not None:
+        cache_len = _serve_attr(serve, "cache_len", 0)
+        n_slots = _serve_attr(serve, "n_slots", 1)
+        prompt_len = _serve_attr(serve, "prompt_len", 0)
+        max_gen = _serve_attr(serve, "max_gen", 0)
+        need = prompt_len + max_gen
+        if cache_len and need > cache_len:
+            if cfg is not None and cfg.is_sub_quadratic:
+                add("P104", INFO,
+                    f"request needs {need} positions > cache_len "
+                    f"{cache_len}, but {cfg.name} decodes with "
+                    "window/recurrent state (the ring wraps by design)",
+                    need=need, cache_len=cache_len)
+            else:
+                add("P018", ERROR,
+                    f"request needs prompt {prompt_len} + gen {max_gen} = "
+                    f"{need} positions but the endpoint's cache_len is "
+                    f"{cache_len}: the full-attention KV cache cannot host "
+                    "it (tokens past cache_len overwrite live entries)",
+                    need=need, cache_len=cache_len)
+        if cfg is not None and cache_len and n_slots:
+            quant = bool(getattr(plan, "kv_cache_quant", False))
+            pool = n_slots * serve_kv_bytes(cfg, cache_len, quant=quant)
+            params = cfg.n_params() * _dtype_bytes(
+                getattr(cfg, "param_dtype", "bfloat16"))
+            capacity = n_devices * device_memory_bytes
+            if params + pool > capacity:
+                add("P019", ERROR,
+                    f"slot pool {pool / GiB:.1f} GiB ({n_slots} slots x "
+                    f"cache_len {cache_len}) + params {params / GiB:.1f} "
+                    f"GiB exceeds the endpoint's {capacity / GiB:.0f} GiB "
+                    f"({n_devices} x {device_memory_bytes / GiB:.0f} GiB)",
+                    plan_field="kv_cache_quant" if not quant else None,
+                    pool_bytes=pool, param_bytes=params,
+                    capacity_bytes=capacity)
+                if not quant:
+                    pool_q = n_slots * serve_kv_bytes(cfg, cache_len,
+                                                      quant=True)
+                    if params + pool_q <= capacity:
+                        add("P104", INFO,
+                            "the slot pool would fit with kv_cache_quant "
+                            f"(int8 cache: {pool_q / GiB:.1f} GiB)",
+                            plan_field="kv_cache_quant",
+                            pool_bytes=pool_q)
 
     # --- P017: implicit attention-block padding -------------------------
     thresh = getattr(plan, "blockwise_attn_threshold", 1 << 30)

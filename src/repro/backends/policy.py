@@ -64,11 +64,15 @@ class SelectionPolicy:
         return self.score_parts(step_time_s, price=price,
                                 modeled_s=step_time_s)
 
-    def select(self, records: List, *,
-               power_budget_w: Optional[float] = None,
-               max_slowdown: Optional[float] = None):
-        """The winning record, or None when nothing is correct + finite
-        (or nothing satisfies the constraints).
+    def rank(self, records: List, *,
+             power_budget_w: Optional[float] = None,
+             max_slowdown: Optional[float] = None) -> List:
+        """Surviving records, best first (possibly empty).
+
+        The constraint semantics of :meth:`select`, returning the full
+        ranked list instead of only the winner — a serve-time router
+        (repro.serve.router) falls through to the next-ranked destination
+        when the best one has no free slot, without re-ranking.
 
         ``power_budget_w`` keeps only records whose modeled ``avg_watts``
         fits the budget (records without a modeled draw are over budget by
@@ -86,7 +90,16 @@ class SelectionPolicy:
             fastest = min(r.best_time_s for r in done)
             done = [r for r in done
                     if r.best_time_s <= max_slowdown * fastest]
-        return min(done, key=self.score) if done else None
+        return sorted(done, key=self.score)
+
+    def select(self, records: List, *,
+               power_budget_w: Optional[float] = None,
+               max_slowdown: Optional[float] = None):
+        """The winning record, or None when nothing is correct + finite
+        (or nothing satisfies the constraints).  ``rank(...)[0]``."""
+        ranked = self.rank(records, power_budget_w=power_budget_w,
+                           max_slowdown=max_slowdown)
+        return ranked[0] if ranked else None
 
 
 class HostTimePolicy(SelectionPolicy):

@@ -142,7 +142,8 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                  policy: Union[str, SelectionPolicy, None] = None,
                  power_budget_w: Optional[float] = None,
                  max_slowdown: Optional[float] = None,
-                 lint_choice=None
+                 lint_choice=None,
+                 publish=None
                  ) -> PlanReport:
     """Run the registry's verifications and select a destination.
 
@@ -174,6 +175,14 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
     destinations within the factor of the fastest correct one — so the
     power follow-up's "power saving within allowed slowdown" evaluation is
     ``plan_offload(policy="power", max_slowdown=1.3)``.
+
+    ``publish`` (a :class:`repro.core.plan_lookup.PlanLookup`) is the write
+    half of the search/lookup split: every mesh-verified record's roofline
+    analysis — and every incorrect record, as a recorded failure — is
+    registered under ``serve_key(backend, app)`` so a serve-time router
+    (repro.serve) can score destinations per request without ever tracing
+    or compiling.  Search stays the slow offline path; the lookup is the
+    hot one.
     """
     runner = runner or TimedRunner()
     backends = backends if backends is not None else default_registry()
@@ -258,6 +267,13 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                 rec.energy_j = e_rep.energy_j
                 rec.avg_watts = e_rep.avg_watts
                 rec.energy_info = e_rep.to_dict()
+
+        # search/lookup split: publish this verification into the serve-time
+        # lookup (correct mesh-verified records warm it; incorrect ones are
+        # recorded failures the router statically refuses)
+        if publish is not None:
+            from repro.core.plan_lookup import publish_record
+            publish_record(publish, rec, backend, app.name)
 
         if rec.met_target:
             early = True

@@ -108,6 +108,10 @@ class CacheStats:
     disk_hits: int = 0       # subset of hits served by the on-disk layer
     misses: int = 0          # fresh lower+compile (== unique artifacts)
     compile_s: float = 0.0   # wall seconds spent in fresh lower+compile
+    # hot-path reads through lookup() (repro.core.plan_lookup / the serve
+    # router): after warm-up these grow while ``misses`` stays flat — the
+    # trace/compile-free routing guarantee is exactly that invariant
+    lookups: int = 0
     # candidates rejected by the static linter (repro.analysis) before any
     # tracing — they count in ``candidates`` but in neither hits nor misses
     static_pruned: int = 0
@@ -127,7 +131,8 @@ class CacheStats:
                 "unique_compiles": self.unique_compiles,
                 "hit_rate": round(self.hit_rate, 4),
                 "compile_s": round(self.compile_s, 3),
-                "static_pruned": self.static_pruned}
+                "static_pruned": self.static_pruned,
+                "lookups": self.lookups}
 
 
 # ------------------------------------------------------------------- cache
@@ -213,6 +218,8 @@ class SearchCache:
             payload = self._entries.get(h)
             if payload is None:
                 payload = self._failed.get(h)
+            if count:
+                self.stats.lookups += 1
             if payload is not None and count:
                 self.stats.hits += 1
                 if h in self._from_disk:
@@ -235,10 +242,17 @@ class SearchCache:
 
     def put_failure(self, key, error: str) -> dict:
         """Memoize a lower/compile failure (memory only: a failure may be
-        environmental, so it must not poison the disk layer)."""
+        environmental, so it must not poison the disk layer).
+
+        A failure supersedes any earlier success for the same key — the
+        latest verification verdict wins, so a serve-time lookup can never
+        dispatch to a destination the planner has since proven wrong."""
         payload = {"error": error}
+        h = hash_key(key)
         with self._lock:
-            self._failed[hash_key(key)] = payload
+            self._entries.pop(h, None)
+            self._from_disk.discard(h)
+            self._failed[h] = payload
             self.stats.misses += 1
         return payload
 

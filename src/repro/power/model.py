@@ -99,6 +99,23 @@ class EnergyModel:
         return self._report(self.watts(utilization, utilization), time_s,
                             "host-time")
 
+    def tick_joules(self, tick_s: float,
+                    active_fraction: float = 1.0) -> float:
+        """Joules one serving tick burns (repro.serve.metrics).
+
+        A continuous-batching slot pool runs the same decode step however
+        many slots are live, so draw scales with occupancy, not work: idle
+        watts are burned for the whole tick unconditionally, active watts
+        for the ``active_fraction`` of slots doing useful decode — the
+        idle-power term is exactly why batching together is cheaper per
+        token than decoding alone.
+        """
+        if not (tick_s > 0.0):
+            return 0.0
+        af = min(max(active_fraction, 0.0), 1.0)
+        return (self.envelope.idle_w
+                + self.envelope.active_w * af) * tick_s
+
 
 def cell_energy(rl, n_chips: float) -> Optional[EnergyReport]:
     """Energy of one compiled mesh cell: the TPU chip envelope scaled to

@@ -1,0 +1,30 @@
+"""repro.serve — online request router + continuous batching engine.
+
+The source paper selects an offload destination *offline*, once per
+application; this package is the production form of that decision made
+**per request**, at runtime, under the power constraints of the follow-up
+study (arXiv 2110.11520):
+
+  * :class:`Request` — one generation request (arch, prompt_len, max_gen,
+    optional SLO deadline, arrival time).
+  * :class:`Router` / :class:`Endpoint` — scores each request against warm
+    :class:`~repro.core.plan_lookup.PlanLookup` analyses for every live
+    backend (``score_analysis`` + :class:`~repro.power.EnergyModel`) and
+    dispatches under the session
+    :class:`~repro.backends.SelectionPolicy`, with admission control from
+    an aggregate ``power_budget_w``.  The hot path is dict lookup +
+    roofline arithmetic: provably trace/compile-free after warm-up.
+  * :class:`ContinuousBatcher` — slot-based decode loop over
+    ``Model.prefill`` / ``Model.decode_step``: requests join and leave the
+    running batch at decode-step granularity over a fixed-shape slot pool,
+    so the jitted step traces exactly once.
+  * :class:`ServeMetrics` — queue/TTFT/TPOT/tok-s counters and per-request
+    joule charges.
+"""
+from repro.serve.batching import ContinuousBatcher
+from repro.serve.metrics import ServeMetrics
+from repro.serve.request import Request
+from repro.serve.router import Endpoint, Router, RoutingDecision
+
+__all__ = ["Request", "Router", "Endpoint", "RoutingDecision",
+           "ContinuousBatcher", "ServeMetrics"]

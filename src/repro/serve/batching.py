@@ -1,0 +1,263 @@
+"""Continuous batching: slot-based decode over a fixed-shape pool.
+
+The engine holds ``n_slots`` per-request decode caches stacked on a new
+leading slot axis and advances them with **one** jitted
+``vmap(decode_step)`` — requests join and leave at decode-step granularity
+without ever changing the traced shapes, so the step compiles exactly once
+per engine (pinned by ``ContinuousBatcher.traces`` and
+tests/test_serve_batching.py).
+
+Slot-pool invariants (the ROADMAP contract):
+
+  * the pool's leading axis is ``n_slots`` on every cache leaf; a slot's
+    cache is replaced wholesale at admission (jitted
+    ``dynamic_update_index_in_dim`` insert, traced index — one trace total),
+    so stale state from a previous occupant can never leak;
+  * inactive slots still run the decode step (fixed shapes beat masked
+    compute at this scale); their outputs are discarded host-side and their
+    cache garbage is overwritten by the next insert;
+  * prefill runs at the **exact** prompt length, one jit per unique length
+    — right-padding a prompt would poison recurrent (ssm/hybrid) state and
+    window-ring caches, and a padded prefill is *not* token-identical to
+    the sequential reference;
+  * at most one prefill is interleaved per tick, so admissions never starve
+    running decodes.
+
+Time is a virtual tick clock (``tick_s`` per engine tick): arrivals,
+TTFT/TPOT and the continuous-vs-static comparison all live on one
+deterministic timeline, independent of host load.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.metrics import ServeMetrics
+from repro.serve.request import Request
+
+DEFAULT_TICK_S = 0.01
+
+
+def synth_tokens(rid: str, prompt_len: int, vocab: int) -> np.ndarray:
+    """Deterministic synthetic prompt for a request without one (traces,
+    benchmarks): seeded from the request id, stable across runs."""
+    rng = np.random.RandomState(zlib.crc32(rid.encode()) & 0x7FFFFFFF)
+    return rng.randint(0, vocab, size=(prompt_len,)).astype(np.int32)
+
+
+class ContinuousBatcher:
+    """Slot-pool continuous batching over one model replica.
+
+    ``model`` / ``params`` are a :class:`repro.models.lm.Model` and its
+    parameters; ``n_slots`` fixes the traced pool width and ``cache_len``
+    the per-slot KV/state length.  ``envelope``
+    (:class:`repro.power.PowerEnvelope`) prices each tick's energy into
+    the metrics; ``eos_id`` stops a request early on that token.
+    """
+
+    def __init__(self, model, params, *, n_slots: int, cache_len: int,
+                 metrics: Optional[ServeMetrics] = None,
+                 envelope=None, eos_id: Optional[int] = None,
+                 tick_s: float = DEFAULT_TICK_S):
+        import jax
+        import jax.numpy as jnp
+        from repro.models.lm import init_cache
+
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1: {n_slots}")
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.n_slots = int(n_slots)
+        self.cache_len = int(cache_len)
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.eos_id = eos_id
+        self.tick_s = float(tick_s)
+        self.energy_model = None
+        if envelope is not None:
+            from repro.power import EnergyModel
+            self.energy_model = EnergyModel(envelope)
+
+        # trace counters: the counted bodies run only while jax is tracing,
+        # so a steady-state tick leaves every counter flat — the engine-side
+        # half of the zero-recompile guarantee
+        self.traces = {"decode_step": 0, "insert": 0, "prefill": 0}
+
+        one = init_cache(self.cfg, 1, self.cache_len,
+                         quant=model.plan.kv_cache_quant)
+        self._pool = jax.tree.map(
+            lambda x: jnp.zeros((self.n_slots,) + x.shape, x.dtype), one)
+
+        def one_step(params, cache, tok, pos):
+            logits, new_cache = model.decode_step(params, cache, tok, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # [1]
+            return nxt, new_cache
+
+        def pool_step(params, pool, toks, poss):
+            self.traces["decode_step"] += 1
+            return jax.vmap(one_step, in_axes=(None, 0, 0, 0))(
+                params, pool, toks, poss)
+
+        def pool_insert(pool, one_cache, idx):
+            self.traces["insert"] += 1
+            return jax.tree.map(
+                lambda p, o: jax.lax.dynamic_update_index_in_dim(
+                    p, o.astype(p.dtype), idx, 0), pool, one_cache)
+
+        self._step = jax.jit(pool_step)
+        self._insert = jax.jit(pool_insert)
+        self._prefill_jits: Dict[int, object] = {}
+
+        # host-side slot state (numpy: mutated at tick granularity)
+        self._active = np.zeros(self.n_slots, dtype=bool)
+        self._pos = np.zeros(self.n_slots, dtype=np.int32)
+        self._last_tok = np.zeros(self.n_slots, dtype=np.int32)
+        self._remaining = np.zeros(self.n_slots, dtype=np.int64)
+        self._slot_req: List[Optional[Request]] = [None] * self.n_slots
+        self._ticks = 0
+        self._queue: List[Request] = []       # arrived, awaiting a slot
+        self._pending: List[Request] = []     # on the trace, not yet arrived
+        self._out: Dict[str, List[int]] = {}
+
+    # ------------------------------------------------------------- intake
+    @property
+    def now_s(self) -> float:
+        return self._ticks * self.tick_s
+
+    @property
+    def free_slots(self) -> int:
+        return int((~self._active).sum())
+
+    @property
+    def live(self) -> int:
+        return int(self._active.sum())
+
+    def submit(self, req: Request):
+        if req.arch and req.arch != self.cfg.name:
+            raise ValueError(
+                f"request {req.rid} wants arch {req.arch!r}, engine serves "
+                f"{self.cfg.name!r} (route first: repro.serve.router)")
+        self.metrics.on_submit(req.rid, req.arrival_s)
+        self._pending.append(req)
+        self._pending.sort(key=lambda r: (r.arrival_s, r.rid))
+
+    # ------------------------------------------------------------ prefill
+    def _prefill_fn(self, prompt_len: int):
+        import jax
+        fn = self._prefill_jits.get(prompt_len)
+        if fn is None:
+            def pf(params, batch):
+                self.traces["prefill"] += 1
+                return self.model.prefill(params, batch, self.cache_len)
+            fn = self._prefill_jits[prompt_len] = jax.jit(pf)
+        return fn
+
+    def _admit(self, req: Request, slot: int, t_done: float):
+        import jax.numpy as jnp
+        toks = req.tokens
+        if toks is None:
+            toks = synth_tokens(req.rid, req.prompt_len,
+                                self.cfg.vocab_size)
+        toks = np.asarray(toks, dtype=np.int32).reshape(1, -1)
+        if toks.shape[1] != req.prompt_len:
+            raise ValueError(f"request {req.rid}: tokens length "
+                             f"{toks.shape[1]} != prompt_len "
+                             f"{req.prompt_len}")
+        batch = {"tokens": jnp.asarray(toks)}
+        for k, v in req.extras.items():
+            batch[k] = v
+        logits, cache = self._prefill_fn(req.prompt_len)(self.params, batch)
+        first = int(np.asarray(logits).argmax(axis=-1)[0])
+
+        self._pool = self._insert(self._pool, cache, slot)
+        self._active[slot] = True
+        self._pos[slot] = req.prompt_len
+        self._last_tok[slot] = first
+        self._remaining[slot] = req.max_gen - 1
+        self._slot_req[slot] = req
+        self._out[req.rid] = [first]
+
+        self.metrics.on_admit(req.rid, t_done)
+        self.metrics.on_token(req.rid, t_done)
+        if self._remaining[slot] <= 0 or \
+                (self.eos_id is not None and first == self.eos_id):
+            self._retire(slot, t_done)
+
+    def _retire(self, slot: int, t: float):
+        req = self._slot_req[slot]
+        self._active[slot] = False
+        self._slot_req[slot] = None
+        self._remaining[slot] = 0
+        if req is not None:
+            self.metrics.on_finish(req.rid, t)
+
+    # --------------------------------------------------------------- tick
+    def tick(self) -> bool:
+        """One engine tick: admit due arrivals (≤1 prefill), advance every
+        active slot one decode step, retire finished requests.  Returns
+        True while any work remains (live slots, queue, or future
+        arrivals)."""
+        import jax.numpy as jnp
+
+        now = self.now_s
+        t_end = now + self.tick_s
+        while self._pending and self._pending[0].arrival_s <= now:
+            self._queue.append(self._pending.pop(0))
+
+        # one interleaved prefill per tick: admissions must not starve the
+        # decode cadence of the requests already running
+        if self._queue and self.free_slots:
+            slot = int(np.flatnonzero(~self._active)[0])
+            self._admit(self._queue.pop(0), slot, t_end)
+
+        live_before = [r.rid for r in self._slot_req if r is not None]
+        if self._active.any():
+            toks = jnp.asarray(
+                self._last_tok.reshape(self.n_slots, 1, 1))
+            poss = jnp.asarray(self._pos)
+            nxt, self._pool = self._step(self.params, self._pool, toks,
+                                         poss)
+            nxt = np.asarray(nxt).reshape(self.n_slots)
+            for slot in np.flatnonzero(self._active):
+                req = self._slot_req[slot]
+                tok = int(nxt[slot])
+                self._out[req.rid].append(tok)
+                self._last_tok[slot] = tok
+                self._pos[slot] += 1
+                self._remaining[slot] -= 1
+                self.metrics.on_token(req.rid, t_end)
+                if self._remaining[slot] <= 0 or \
+                        (self.eos_id is not None and tok == self.eos_id):
+                    self._retire(slot, t_end)
+
+        self._ticks += 1
+        if self.energy_model is not None:
+            joules = self.energy_model.tick_joules(
+                self.tick_s, len(live_before) / self.n_slots)
+            self.metrics.charge_tick(joules, live_before)
+        else:
+            self.metrics.charge_tick(0.0, live_before)
+        return bool(self._active.any() or self._queue or self._pending)
+
+    # ---------------------------------------------------------------- run
+    def run(self, requests: Optional[List[Request]] = None,
+            max_ticks: int = 1_000_000) -> Dict[str, np.ndarray]:
+        """Drive ticks until every submitted request completes; returns
+        ``{rid: generated tokens [max_gen]}`` (greedy decode)."""
+        for req in requests or ():
+            self.submit(req)
+        # fast-forward to the first arrival: an empty engine burning idle
+        # ticks until the trace starts is not useful work
+        if not self._active.any() and not self._queue and self._pending:
+            first = self._pending[0].arrival_s
+            if first > self.now_s:
+                self._ticks = int(np.ceil(first / self.tick_s - 1e-9))
+        for _ in range(max_ticks):
+            if not self.tick():
+                break
+        else:
+            raise RuntimeError(f"engine did not drain in {max_ticks} ticks")
+        return {rid: np.asarray(toks, dtype=np.int32)
+                for rid, toks in self._out.items()}

@@ -1,0 +1,231 @@
+"""Online request router: the paper's destination choice, per request.
+
+The offline planner (``plan_offload``) verifies destinations once per
+application; at serve time the same decision repeats per request, so every
+ingredient must already be warm:
+
+  * each live :class:`Endpoint`'s plan analysis is published into a
+    :class:`~repro.core.plan_lookup.PlanLookup` (by ``plan_offload(...,
+    publish=...)`` or directly at endpoint registration);
+  * routing a request is then: static lint prune
+    (``lint_plan(serve=...)``, the PR-6 prune-before-compile contract) →
+    warm payload lookup (a recorded verification *failure* refuses the
+    endpoint outright) → pure-arithmetic roofline scoring
+    (``score_analysis``) scaled to the request's token work →
+    :class:`~repro.power.EnergyModel` watts/joules → ranking under the
+    session :class:`~repro.backends.SelectionPolicy` with admission
+    control from the aggregate ``power_budget_w``.
+
+Nothing on this path traces or compiles: after warm-up, routing N requests
+moves only ``CacheStats.lookups`` — ``CacheStats.misses`` (the compile
+counter) stays flat, pinned by tests/test_serve_router.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.backends import SelectionPolicy, get_policy
+from repro.core.measure import CompiledCostRunner
+from repro.core.plan_lookup import PlanLookup, serve_key
+from repro.serve.metrics import ServeMetrics
+from repro.serve.request import Request
+
+
+@dataclass
+class Endpoint:
+    """One live serving destination: a backend's machine running one arch
+    under one serving plan, with a fixed continuous-batching slot pool."""
+    name: str
+    backend: object                 # repro.backends.Backend (duck-typed)
+    arch: str
+    n_chips: int = 1
+    n_slots: int = 4
+    cache_len: int = 256
+    plan: object = None             # repro.dist.plan.Plan (serving genes)
+    cfg: object = None              # ModelConfig (for the static lint)
+    engine: object = None           # optional ContinuousBatcher
+    # live state the router maintains
+    in_flight: int = 0
+
+    @property
+    def free_slots(self) -> int:
+        return max(self.n_slots - self.in_flight, 0)
+
+    def lookup_key(self):
+        return serve_key(getattr(self.backend, "name", self.name),
+                         self.arch, self.plan)
+
+
+@dataclass
+class _Candidate:
+    """Duck-typed record for SelectionPolicy.rank (the policies read
+    ``correct`` / ``best_time_s`` / ``price`` / ``mesh_time_s`` /
+    ``energy_j`` / ``avg_watts``)."""
+    endpoint: Endpoint
+    best_time_s: float
+    price: float
+    correct: bool = True
+    mesh_time_s: Optional[float] = None
+    energy_j: Optional[float] = None
+    avg_watts: Optional[float] = None
+    mesh_info: Dict = field(default_factory=dict)
+
+
+@dataclass
+class RoutingDecision:
+    rid: str
+    endpoint: Optional[Endpoint]            # None == rejected
+    reason: str = ""                        # rejection reason / "ok"
+    service_time_s: Optional[float] = None  # modeled prefill+decode seconds
+    energy_j: Optional[float] = None
+    avg_watts: Optional[float] = None
+    considered: int = 0                     # endpoints that survived pruning
+
+    @property
+    def accepted(self) -> bool:
+        return self.endpoint is not None
+
+
+class Router:
+    """Score-and-dispatch over live endpoints (see module docstring).
+
+    ``power_budget_w`` is the *fleet* budget: admission subtracts the draw
+    of requests already in flight, so a request is rejected when the
+    marginal endpoint draw no longer fits — the serve-time form of the
+    power follow-up's "within allowed power" selection.
+    """
+
+    def __init__(self, endpoints: List[Endpoint], lookup: PlanLookup, *,
+                 policy=None, power_budget_w: Optional[float] = None,
+                 metrics: Optional[ServeMetrics] = None):
+        if not endpoints:
+            raise ValueError("router needs at least one endpoint")
+        names = [e.name for e in endpoints]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate endpoint names: {names}")
+        self.endpoints = list(endpoints)
+        self.lookup = lookup
+        self.policy: SelectionPolicy = get_policy(policy)
+        self.power_budget_w = power_budget_w
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        # draw currently admitted per endpoint (watts, modeled at routing)
+        self._draw_w: Dict[str, float] = {e.name: 0.0 for e in endpoints}
+
+    # ------------------------------------------------------------- state
+    @property
+    def fleet_draw_w(self) -> float:
+        return sum(self._draw_w.values())
+
+    def dispatch(self, decision: "RoutingDecision"):
+        """Commit an accepted decision: occupy a slot, add its draw."""
+        ep = decision.endpoint
+        if ep is None:
+            raise ValueError(f"cannot dispatch rejected request "
+                             f"{decision.rid}")
+        ep.in_flight += 1
+        if decision.avg_watts is not None:
+            self._draw_w[ep.name] += decision.avg_watts
+
+    def complete(self, decision: "RoutingDecision"):
+        """Release an admitted request's slot and draw."""
+        ep = decision.endpoint
+        if ep is None:
+            return
+        ep.in_flight = max(ep.in_flight - 1, 0)
+        if decision.avg_watts is not None:
+            self._draw_w[ep.name] = max(
+                self._draw_w[ep.name] - decision.avg_watts, 0.0)
+
+    # ----------------------------------------------------------- scoring
+    def _score_endpoint(self, ep: Endpoint,
+                        req: Request) -> Optional[_Candidate]:
+        """Warm-path score of one endpoint for one request, or None when
+        the endpoint cannot serve it (cold lookup, recorded failure, or a
+        static lint error).  Pure arithmetic — no jax."""
+        from repro.analysis import lint_plan
+        if ep.plan is not None or ep.cfg is not None:
+            findings = lint_plan(
+                ep.plan if ep.plan is not None else _NULL_PLAN,
+                cfg=ep.cfg,
+                serve={"n_slots": ep.n_slots, "cache_len": ep.cache_len,
+                       "prompt_len": req.prompt_len,
+                       "max_gen": req.max_gen})
+            if any(f.severity == "error" for f in findings):
+                self.lookup.stats.static_pruned += 1
+                return None
+        payload = self.lookup.lookup(ep.lookup_key())
+        if not self.lookup.usable(payload):
+            return None             # cold or a recorded verification failure
+        runner = CompiledCostRunner(n_chips=ep.n_chips)
+        ev = runner.score_analysis(payload["analysis"], cache_hit=True)
+        if not ev.correct or ev.time_s == float("inf"):
+            return None
+        # the warm analysis describes one decode step; the request costs
+        # max_gen steps plus a prefill charged as prompt work at step rate
+        step_s = ev.time_s
+        service_s = step_s * (req.max_gen + req.prompt_len / 8.0)
+        rl = ev.info.get("roofline", {})
+        cand = _Candidate(
+            endpoint=ep, best_time_s=service_s,
+            price=getattr(ep.backend, "price", 1.0),
+            mesh_time_s=service_s, mesh_info={"roofline": rl})
+        from repro.power import EnergyModel, envelope_for
+        model = EnergyModel(envelope_for(ep.backend))
+        rep = model.from_roofline(rl) if rl else None
+        if rep is not None:
+            cand.avg_watts = rep.avg_watts
+            cand.energy_j = rep.avg_watts * service_s
+        return cand
+
+    # ----------------------------------------------------------- routing
+    def route(self, req: Request) -> RoutingDecision:
+        """Choose an endpoint for one request (does not dispatch — call
+        :meth:`dispatch` on an accepted decision to commit it)."""
+        self.metrics.on_submit(req.rid, req.arrival_s)
+        cands = [c for c in (self._score_endpoint(ep, req)
+                             for ep in self.endpoints) if c is not None]
+        if not cands:
+            self.metrics.on_reject(req.rid, "no feasible endpoint")
+            return RoutingDecision(req.rid, None,
+                                   reason="no feasible endpoint")
+        headroom = None
+        if self.power_budget_w is not None:
+            headroom = self.power_budget_w - self.fleet_draw_w
+        ranked = self.policy.rank(cands, power_budget_w=headroom)
+        if not ranked:
+            self.metrics.on_reject(req.rid, "power budget saturated")
+            return RoutingDecision(req.rid, None,
+                                   reason="power budget saturated",
+                                   considered=len(cands))
+        if req.deadline_s is not None:
+            ranked = [c for c in ranked if c.best_time_s <= req.deadline_s]
+            if not ranked:
+                self.metrics.on_reject(req.rid, "SLO infeasible")
+                return RoutingDecision(req.rid, None,
+                                       reason="SLO infeasible",
+                                       considered=len(cands))
+        for cand in ranked:
+            if cand.endpoint.free_slots > 0:
+                return RoutingDecision(
+                    req.rid, cand.endpoint, reason="ok",
+                    service_time_s=cand.best_time_s,
+                    energy_j=cand.energy_j, avg_watts=cand.avg_watts,
+                    considered=len(cands))
+        self.metrics.on_reject(req.rid, "all slots busy")
+        return RoutingDecision(req.rid, None, reason="all slots busy",
+                               considered=len(cands))
+
+
+class _NullPlanType:
+    """Stand-in plan when an endpoint lints with cfg only."""
+    def __getattr__(self, name):
+        raise AttributeError(name)
+
+
+_NULL_PLAN = None
+try:
+    from repro.dist.plan import Plan as _Plan
+    _NULL_PLAN = _Plan()
+except Exception:                               # pragma: no cover
+    _NULL_PLAN = _NullPlanType()

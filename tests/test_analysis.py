@@ -168,6 +168,58 @@ def test_p012_decode_kv_shard_replication():
     assert rules(lint_plan(plan, mesh=SINGLE, shape=TRAIN), "P013")
 
 
+def test_p018_serve_request_overflows_full_attention_cache():
+    """Serving context: a request whose prompt+gen exceed cache_len is a
+    static error on a full-attention arch (the router prunes the endpoint
+    before scoring) and an info note on a sub-quadratic one (window rings
+    wrap by design)."""
+    full = get_config("granite-3-2b").reduced()          # attn_kind=full
+    swa = get_config("h2o-danube-1.8b").reduced()        # attn_kind=swa
+    serve = {"n_slots": 2, "cache_len": 64, "prompt_len": 60, "max_gen": 20}
+    out = lint_plan(Plan(), cfg=full, serve=serve)
+    assert rules(out, "P018") and has_errors(out)
+    out = lint_plan(Plan(), cfg=swa, serve=serve)
+    assert not has_errors(out)
+    assert rules(out, "P104")
+    # a fitting request lints clean on both
+    ok = {"n_slots": 2, "cache_len": 64, "prompt_len": 8, "max_gen": 8}
+    assert not lint_plan(Plan(), cfg=full, serve=ok)
+
+
+def test_p019_slot_pool_exceeds_capacity_and_quant_hint():
+    """A slot pool the endpoint's memory provably cannot host is a static
+    error; when int8 KV would fit, the P104 hint names kv_cache_quant."""
+    import dataclasses
+    cfg = get_config("granite-3-2b")                     # full-size params
+    serve = {"n_slots": 64, "cache_len": 131072,
+             "prompt_len": 8, "max_gen": 8}
+    # 1-device endpoint: pool + params blow straight past 16 GiB
+    out = lint_plan(Plan(), cfg=cfg, serve=serve)
+    p19 = rules(out, "P019")
+    assert p19 and has_errors(out)
+    # with quant requested the pool halves; whether or not it then fits,
+    # the unquantized lint must carry the hint exactly when quant rescues
+    hints = rules(out, "P104")
+    quant_out = lint_plan(dataclasses.replace(Plan(), kv_cache_quant=True),
+                          cfg=cfg, serve=serve)
+    if not rules(quant_out, "P019"):
+        assert hints, "quant rescues the pool but no P104 hint was raised"
+    # a small pool on a big endpoint lints clean
+    small = {"n_slots": 2, "cache_len": 256, "prompt_len": 8, "max_gen": 8}
+    assert not rules(lint_plan(Plan(), mesh={"data": 64}, cfg=cfg,
+                               serve=small), "P019")
+
+
+def test_serve_lint_accepts_endpoint_like_objects():
+    """The serve context duck-types: the router passes dicts, but any
+    object with the four fields works."""
+    class Ep:
+        n_slots, cache_len, prompt_len, max_gen = 2, 32, 30, 30
+    out = lint_plan(Plan(), cfg=get_config("granite-3-2b").reduced(),
+                    serve=Ep())
+    assert rules(out, "P018")
+
+
 def test_named_plans_lint_clean_on_documented_contexts():
     """Acceptance (satellite 2): every named plan on its documented mesh and
     shapes carries no error- or warning-severity findings."""
