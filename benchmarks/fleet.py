@@ -1,0 +1,165 @@
+"""Fleet benchmark: GA placement vs greedy vs static round-robin.
+
+The real planner flow end to end: ``plan_offload(..., publish=lookup)``
+verifies each paper app once and publishes its per-destination rooflines
+(including one *forced failure* verdict), then the fleet planner places a
+multi-app fleet over the shared pool three ways and compares
+joules-per-request-served:
+
+  * ``round_robin`` — the static capacity- and verdict-blind baseline;
+  * ``greedy``      — the planner's bin-packing seed;
+  * ``ga``          — ``FleetPlanner.plan`` (GA seeded with greedy).
+
+Emits ``BENCH_fleet.json`` (a CI artifact next to BENCH_energy.json) and
+exits 1 if the GA or greedy placement is infeasible, ever places an app on
+a backend with a published failure verdict, or does worse than the static
+baseline on the power objective — the invariants the CI step gates on.
+
+    PYTHONPATH=src python benchmarks/fleet.py [--out BENCH_fleet.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+APPS_UNDER_TEST = ("3mm", "NAS.BT", "tdFIR")
+# the pair the verification environment is scripted to "prove wrong":
+# the benchmark asserts no planner ever places this app on this backend
+FORCED_FAILURE = ("tdFIR", "xla_dp")
+
+
+def _placement_row(name, p, lookup_failures):
+    row = {
+        "strategy": name,
+        "feasible": p.feasible,
+        "by_app": p.by_app,
+        "objective_w": p.objective,
+        "fleet_draw_w": p.fleet_draw_w,
+        "joules_per_request": p.joules_per_request,
+        "violations": p.violations,
+    }
+    row["placed_on_failed_verdict"] = sorted(
+        app for app, backend in p.by_app.items()
+        if (backend, app.split("#")[0]) in lookup_failures)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="fleet copies of each verified app")
+    args = ap.parse_args()
+
+    from repro.backends import DEFAULT_REGISTRY
+    from repro.core.ga import GAConfig
+    from repro.core.measure import TimedRunner
+    from repro.core.plan_lookup import PlanLookup, serve_key
+    from repro.core.planner import UserTarget, plan_offload
+    from repro.fleet import (FleetApp, FleetPlanner, PoolBackend,
+                             round_robin)
+    from repro.apps import APPS
+
+    lookup = PlanLookup()
+    failures = []
+    plan_elapsed = {}
+    for name in APPS_UNDER_TEST:
+        app = APPS[name]()
+        inputs = app.make_inputs(seed=0, small=True)
+        t0 = time.time()
+        report = plan_offload(
+            app, UserTarget(), inputs=inputs,
+            runner=TimedRunner(repeats=1),
+            ga_cfg=GAConfig.for_gene_length(min(app.gene_length, 6),
+                                            seed=0),
+            policy="power", publish=lookup)
+        plan_elapsed[name] = round(time.time() - t0, 2)
+        if report.selected is None:
+            failures.append(f"{name}: plan_offload selected nothing")
+
+    # the forced failure verdict: the verification environment "proved"
+    # this (backend, app) pair wrong — published exactly like plan_offload
+    # publishes real failures, so the planner must statically refuse it
+    fail_app, fail_backend = FORCED_FAILURE
+    lookup.register_failure(serve_key(fail_backend, fail_app),
+                            "benchmark: forced wrong-result verdict")
+    lookup_failures = {(fail_backend, fail_app)}
+
+    pool = [PoolBackend(name=b.name, backend=b, n_chips=1, slots=64.0)
+            for b in DEFAULT_REGISTRY]
+    fleet = [FleetApp(name=f"{name}#{i}", arch=name, load_rps=2.0,
+                      tokens_per_request=8.0)
+             for name in APPS_UNDER_TEST
+             for i in range(args.replicas)]
+    planner = FleetPlanner(pool, lookup, policy="power",
+                           ga_cfg=GAConfig(population=8, generations=8,
+                                           seed=0))
+
+    t0 = time.time()
+    ga_p = planner.plan(fleet)
+    plan_s = time.time() - t0
+    greedy_genes = planner.greedy(fleet)
+    greedy_p = (planner.evaluate(fleet, greedy_genes)
+                if greedy_genes is not None else None)
+    rr_p = planner.evaluate(fleet, round_robin(fleet, pool))
+
+    rows = [_placement_row("round_robin", rr_p, lookup_failures)]
+    if greedy_p is not None:
+        rows.append(_placement_row("greedy", greedy_p, lookup_failures))
+    else:
+        failures.append("greedy found no feasible placement")
+    rows.append(_placement_row("ga", ga_p, lookup_failures))
+
+    for row in rows:
+        if row["strategy"] == "round_robin":
+            continue                     # the baseline is allowed to be bad
+        if not row["feasible"]:
+            failures.append(f"{row['strategy']}: infeasible placement: "
+                            f"{row['violations']}")
+        if row["placed_on_failed_verdict"]:
+            failures.append(
+                f"{row['strategy']}: placed "
+                f"{row['placed_on_failed_verdict']} on a backend with a "
+                f"published failure verdict")
+    if greedy_p is not None and ga_p.feasible \
+            and ga_p.objective > greedy_p.objective + 1e-9:
+        failures.append(
+            f"ga objective {ga_p.objective:.4f} W worse than its greedy "
+            f"seed {greedy_p.objective:.4f} W")
+    if rr_p.feasible and ga_p.feasible \
+            and ga_p.joules_per_request > rr_p.joules_per_request + 1e-9:
+        failures.append(
+            f"ga joules/request {ga_p.joules_per_request:.4f} worse than "
+            f"static round-robin {rr_p.joules_per_request:.4f}")
+
+    for row in rows:
+        print(f"fleet/{row['strategy']:12s}: "
+              f"{row['joules_per_request']:.4f} J/request, "
+              f"draw {row['fleet_draw_w']:.2f} W, "
+              f"feasible={row['feasible']}")
+    out = {
+        "bench": "fleet",
+        "apps": list(APPS_UNDER_TEST),
+        "replicas": args.replicas,
+        "forced_failure": {"app": fail_app, "backend": fail_backend},
+        "plan_offload_elapsed_s": plan_elapsed,
+        "fleet_plan_elapsed_s": round(plan_s, 3),
+        "placements": rows,
+        "failures": failures,
+    }
+    Path(args.out).write_text(json.dumps(out, indent=1))
+    print(f"wrote {args.out}")
+    if failures:
+        print("FAIL:", *failures, sep="\n  ")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -120,6 +120,7 @@ def main():
     # energy of each candidate's roofline (utilization x the mesh slice's
     # TPU chip envelope — a comm/bubble-heavy plan burns idle watts over a
     # longer step and loses even when its host ranking was close)
+    from repro.core.candidates import Candidate
     from repro.power import cell_energy
     valid_bytes = [x.info["roofline"]["bytes_per_device"]
                    for x in res.evaluations.values()
@@ -130,10 +131,9 @@ def main():
         return e.info["roofline"]["bytes_per_device"] / base_bytes
 
     def cand_score(e):
-        e_rep = cell_energy(e.info["roofline"], mesh.size)
-        return pol.score_cell(
-            e.time_s, price=price_proxy(e),
-            energy=e_rep.to_dict() if e_rep is not None else None)
+        return pol.score_candidate(Candidate.from_roofline(
+            e.info["roofline"], n_chips=mesh.size, price=price_proxy(e),
+            time_s=e.time_s, backend="mesh", arch=args.arch, ref=e))
 
     scored = [(cand_score(e), genes, e)
               for genes, e in res.evaluations.items()

@@ -14,21 +14,31 @@ awareness — so the objective is a pluggable :class:`SelectionPolicy`:
     relative dollar, using the paper's price ordering.
   * ``power``           — min modeled joules per step (repro.power): the
     planner charges every correct record's energy against its backend's
-    power envelope — roofline-utilization watts when a ``cost_runner``
-    recorded a mesh roofline, envelope × host-time otherwise — and this
-    policy ranks ``VerificationRecord.energy_j``.
+    power envelope and this policy ranks the charge.
   * ``edp``             — min energy-delay product (``energy_j × time``):
     the compromise objective when pure joules would tolerate an arbitrary
     slowdown.
 
-Selection constraints compose with any policy (``SelectionPolicy.select``):
-``power_budget_w`` drops records whose modeled average draw exceeds the
-budget (the follow-up's "within allowed power" mode), ``max_slowdown``
-drops records slower than the fastest correct one by more than the factor
-(its "power saving within allowed slowdown" evaluation:
+**The Candidate contract (PR 8).** Every consumer — ``plan_offload``
+record selection, the serve-time :class:`~repro.serve.Router`, dryrun cell
+ranking, the autoplan rerank, the fleet placement planner — builds
+:class:`~repro.core.candidates.Candidate` objects and calls one entry
+point: :meth:`SelectionPolicy.rank(candidates, power_budget_w=,
+max_slowdown=)`.  :meth:`score_candidate` is the one ranking key a policy
+implements; the pre-Candidate faces (``score`` / ``score_parts`` /
+``score_cell``) survive as thin deprecation shims, and a *custom* policy
+registered against them keeps working — ``score_candidate``'s default
+bridges to whichever legacy face the subclass overrode (a Candidate quacks
+like a ``VerificationRecord``, so the old arithmetic ranks it unchanged).
+
+Selection constraints compose with any policy (:meth:`rank` /
+:meth:`select`): ``power_budget_w`` drops candidates whose modeled average
+draw exceeds the budget (the follow-up's "within allowed power" mode),
+``max_slowdown`` drops candidates slower than the fastest correct one by
+more than the factor ("power saving within allowed slowdown":
 ``plan_offload(policy="power", max_slowdown=1.3)``).
 
-Every policy ranks only *correct, finite* records — a penalized wrong
+Every policy ranks only *correct, finite* candidates — a penalized wrong
 result can never be the chosen destination, whatever the objective.
 """
 from __future__ import annotations
@@ -36,68 +46,93 @@ from __future__ import annotations
 from typing import Dict, List, Optional, Union
 
 
+def _modeled_or_host(cand) -> float:
+    m = getattr(cand, "mesh_time_s", None)
+    return m if m is not None else cand.best_time_s
+
+
 class SelectionPolicy:
-    """Rank verification records; lower ``score`` wins."""
+    """Rank candidates; lower ``score_candidate`` wins."""
 
     name: str = "base"
 
+    # ------------------------------------------------------ canonical face
+    def score_candidate(self, cand) -> float:
+        """Ranking key for one :class:`~repro.core.candidates.Candidate`
+        (or anything with its duck fields: ``correct`` / ``best_time_s`` /
+        ``price`` / ``mesh_time_s`` / ``energy_j`` / ``avg_watts``).
+
+        Built-in policies override this; the default bridges a *legacy*
+        subclass — one that overrode ``score`` or ``score_parts`` before
+        the Candidate refactor — by routing through its old face.
+        """
+        cls = type(self)
+        if cls.score is not SelectionPolicy.score:
+            return cls.score(self, cand)
+        if cls.score_parts is not SelectionPolicy.score_parts:
+            return cls.score_parts(self, cand.best_time_s,
+                                   getattr(cand, "price", 1.0),
+                                   getattr(cand, "mesh_time_s", None))
+        raise NotImplementedError(
+            f"{cls.__name__} must implement score_candidate "
+            f"(or a legacy score/score_parts face)")
+
+    # ------------------------------------------------- deprecated shims
+    def score(self, record) -> float:
+        """Deprecated shim (pre-Candidate face): rank one planner
+        ``VerificationRecord``.  Records carry the Candidate duck fields,
+        so this is :meth:`score_candidate` verbatim."""
+        return self.score_candidate(record)
+
     def score_parts(self, time_s: float, price: float = 1.0,
                     modeled_s: Optional[float] = None) -> float:
-        """Ranking key from raw parts.  Mesh cells are ranked through
-        :meth:`score_cell` (repro.launch.dryrun, where ``price`` is the
-        chip count), whose default delegates here; the energy policies
-        override ``score_cell`` to consume the cell's modeled joules."""
-        raise NotImplementedError
-
-    def score(self, record) -> float:
-        """Ranking key for a planner VerificationRecord (duck-typed:
-        ``best_time_s`` / ``price`` / ``mesh_time_s`` / ``energy_j``)."""
-        return self.score_parts(record.best_time_s, record.price,
-                                getattr(record, "mesh_time_s", None))
+        """Deprecated shim (pre-Candidate face): rank from raw parts."""
+        from repro.core.candidates import Candidate
+        return self.score_candidate(Candidate(
+            best_time_s=time_s, price=price, mesh_time_s=modeled_s,
+            source="parts"))
 
     def score_cell(self, step_time_s: float, price: float = 1.0,
                    energy: Optional[Dict] = None) -> float:
-        """Ranking key for one compiled artifact (a dryrun mesh cell or an
-        autoplan GA candidate): modeled step time, relative price (chip
-        count / memory-traffic proxy) and, when modeled, the cell's
-        ``EnergyReport.to_dict()``."""
-        return self.score_parts(step_time_s, price=price,
-                                modeled_s=step_time_s)
+        """Deprecated shim (pre-Candidate face): rank one compiled mesh
+        cell.  ``Candidate.from_cell`` is the replacement."""
+        from repro.core.candidates import Candidate
+        return self.score_candidate(Candidate.from_cell(
+            step_time_s, n_chips=price, energy=energy))
 
-    def rank(self, records: List, *,
+    # -------------------------------------------------------- selection
+    def rank(self, candidates: List, *,
              power_budget_w: Optional[float] = None,
              max_slowdown: Optional[float] = None) -> List:
-        """Surviving records, best first (possibly empty).
+        """Surviving candidates, best first (possibly empty) — THE
+        selection entry point every consumer shares.
 
-        The constraint semantics of :meth:`select`, returning the full
-        ranked list instead of only the winner — a serve-time router
-        (repro.serve.router) falls through to the next-ranked destination
-        when the best one has no free slot, without re-ranking.
-
-        ``power_budget_w`` keeps only records whose modeled ``avg_watts``
-        fits the budget (records without a modeled draw are over budget by
-        definition — an unknown draw cannot prove it fits).
-        ``max_slowdown`` keeps only records within the factor of the
-        fastest surviving correct record's host time.
+        ``power_budget_w`` keeps only candidates whose modeled
+        ``avg_watts`` fits the budget (a candidate without a modeled draw
+        is over budget by definition — an unknown draw cannot prove it
+        fits).  ``max_slowdown`` keeps only candidates within the factor
+        of the fastest surviving correct candidate's time.  A serve-time
+        router falls through the returned order when the best endpoint has
+        no free slot, without re-ranking.
         """
-        done = [r for r in records
-                if r.correct and r.best_time_s < float("inf")]
+        done = [c for c in candidates
+                if c.correct and c.best_time_s < float("inf")]
         if power_budget_w is not None:
-            done = [r for r in done
-                    if getattr(r, "avg_watts", None) is not None
-                    and r.avg_watts <= power_budget_w]
+            done = [c for c in done
+                    if getattr(c, "avg_watts", None) is not None
+                    and c.avg_watts <= power_budget_w]
         if max_slowdown is not None and done:
-            fastest = min(r.best_time_s for r in done)
-            done = [r for r in done
-                    if r.best_time_s <= max_slowdown * fastest]
-        return sorted(done, key=self.score)
+            fastest = min(c.best_time_s for c in done)
+            done = [c for c in done
+                    if c.best_time_s <= max_slowdown * fastest]
+        return sorted(done, key=self.score_candidate)
 
-    def select(self, records: List, *,
+    def select(self, candidates: List, *,
                power_budget_w: Optional[float] = None,
                max_slowdown: Optional[float] = None):
-        """The winning record, or None when nothing is correct + finite
+        """The winning candidate, or None when nothing is correct + finite
         (or nothing satisfies the constraints).  ``rank(...)[0]``."""
-        ranked = self.rank(records, power_budget_w=power_budget_w,
+        ranked = self.rank(candidates, power_budget_w=power_budget_w,
                            max_slowdown=max_slowdown)
         return ranked[0] if ranked else None
 
@@ -105,22 +140,22 @@ class SelectionPolicy:
 class HostTimePolicy(SelectionPolicy):
     name = "host-time"
 
-    def score_parts(self, time_s, price=1.0, modeled_s=None):
-        return time_s
+    def score_candidate(self, cand):
+        return cand.best_time_s
 
 
 class ModeledPolicy(SelectionPolicy):
     name = "modeled"
 
-    def score_parts(self, time_s, price=1.0, modeled_s=None):
-        return modeled_s if modeled_s is not None else time_s
+    def score_candidate(self, cand):
+        return _modeled_or_host(cand)
 
 
 class PriceWeightedPolicy(SelectionPolicy):
     name = "price-weighted"
 
-    def score_parts(self, time_s, price=1.0, modeled_s=None):
-        return time_s * price
+    def score_candidate(self, cand):
+        return cand.best_time_s * getattr(cand, "price", 1.0)
 
 
 class PowerPolicy(SelectionPolicy):
@@ -129,35 +164,34 @@ class PowerPolicy(SelectionPolicy):
     name = "power"
 
     @staticmethod
-    def _fallback_joules(record) -> float:
-        """Joule-scale charge for a record nothing charged (not produced by
-        this build's plan_offload): the generic envelope at peak over the
-        modeled-or-host time.  Keeping the unit in joules matters — a
-        seconds-scale proxy would let every *unknown* draw outrank every
-        modeled one in a mixed record set."""
+    def _fallback_joules(cand) -> float:
+        """Joule-scale charge for a candidate nothing charged (not produced
+        by this build's plan_offload / Candidate constructors): the generic
+        envelope at peak over the modeled-or-host time.  Keeping the unit
+        in joules matters — a seconds-scale proxy would let every *unknown*
+        draw outrank every modeled one in a mixed candidate set."""
         from repro.power import GENERIC
-        t = getattr(record, "mesh_time_s", None)
-        if t is None:
-            t = record.best_time_s
-        return GENERIC.peak_w * t
+        return GENERIC.peak_w * _modeled_or_host(cand)
 
-    def score(self, record):
-        e = getattr(record, "energy_j", None)
-        return e if e is not None else self._fallback_joules(record)
+    def score_candidate(self, cand):
+        e = getattr(cand, "energy_j", None)
+        return e if e is not None else self._fallback_joules(cand)
 
     def score_parts(self, time_s, price=1.0, modeled_s=None):
-        # joule-scale like every other path of this policy: generic peak
-        # draw, scaled by the relative price as a machine-size stand-in
+        # deprecated shim; keeps the historical price scaling (a
+        # machine-size stand-in) of the uncharged joule-scale fallback
         from repro.power import GENERIC
         t = modeled_s if modeled_s is not None else time_s
         return GENERIC.peak_w * t * price
 
     def score_cell(self, step_time_s, price=1.0, energy=None):
         if energy is not None:
-            return energy["energy_j"]
-        # same unit rule as _fallback_joules, scaled by the cell's price
-        # (chip count): an unmodelled big slice must not under-score a
-        # modeled one
+            return self.score_candidate(__import__(
+                "repro.core.candidates", fromlist=["Candidate"]
+            ).Candidate.from_cell(step_time_s, n_chips=price, energy=energy))
+        # deprecated shim, uncharged cell: same unit rule as
+        # _fallback_joules, scaled by the cell's price (chip count) — an
+        # unmodelled big slice must not under-score a modeled one
         from repro.power import GENERIC
         return GENERIC.peak_w * step_time_s * price
 
@@ -167,17 +201,14 @@ class EdpPolicy(SelectionPolicy):
 
     name = "edp"
 
-    def _delay(self, record):
-        m = getattr(record, "mesh_time_s", None)
-        return m if m is not None else record.best_time_s
-
-    def score(self, record):
-        e = getattr(record, "energy_j", None)
+    def score_candidate(self, cand):
+        e = getattr(cand, "energy_j", None)
         if e is None:
-            e = PowerPolicy._fallback_joules(record)
-        return e * self._delay(record)
+            e = PowerPolicy._fallback_joules(cand)
+        return e * _modeled_or_host(cand)
 
     def score_parts(self, time_s, price=1.0, modeled_s=None):
+        # deprecated shim; see PowerPolicy.score_parts
         from repro.power import GENERIC
         t = modeled_s if modeled_s is not None else time_s
         return GENERIC.peak_w * t * t * price
@@ -185,6 +216,7 @@ class EdpPolicy(SelectionPolicy):
     def score_cell(self, step_time_s, price=1.0, energy=None):
         if energy is not None:
             return energy["edp"]
+        # deprecated shim, uncharged cell; see PowerPolicy.score_cell
         from repro.power import GENERIC
         return GENERIC.peak_w * step_time_s * step_time_s * price
 

@@ -75,11 +75,18 @@ def run_ga(gene_length: int,
            evaluate: Callable[[Tuple[int, ...]], Evaluation],
            cfg: GAConfig,
            evaluate_batch: Optional[
-               Callable[[List[Tuple[int, ...]]], List[Evaluation]]] = None
+               Callable[[List[Tuple[int, ...]]], List[Evaluation]]] = None,
+           seed_population: Optional[Sequence[Tuple[int, ...]]] = None
            ) -> GAResult:
     """``evaluate_batch``, when given, scores a whole generation's unseen
     individuals in one call (e.g. batching XLA lowering/compilation across
-    the population); ``evaluate`` remains the per-individual fallback."""
+    the population); ``evaluate`` remains the per-individual fallback.
+
+    ``seed_population`` injects known-good individuals ahead of the random
+    fill (after the all-zeros baseline) — e.g. a greedy bin-packing
+    solution the GA should start from rather than rediscover.  Individuals
+    beyond ``cfg.population`` are ignored; omitted -> identical behavior
+    to before the parameter existed."""
     rng = random.Random(cfg.seed)
     cards = list(cfg.cardinalities or [2] * gene_length)
     assert len(cards) == gene_length
@@ -111,8 +118,15 @@ def run_ga(gene_length: int,
         return [ev(g) for g in pop], len(fresh)
 
     # initial population: all-zeros (the no-offload baseline is always a
-    # candidate) + random individuals, de-duplicated when possible
+    # candidate) + caller-seeded individuals + random fill, de-duplicated
+    # when possible
     pop: List[Tuple[int, ...]] = [tuple([0] * gene_length)]
+    for g in (seed_population or ()):
+        g = tuple(int(v) for v in g)
+        assert len(g) == gene_length, \
+            f"seed individual has {len(g)} genes, expected {gene_length}"
+        if g not in pop and len(pop) < cfg.population:
+            pop.append(g)
     guard = 0
     while len(pop) < cfg.population:
         g = rand_genes()

@@ -279,17 +279,24 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
             early = True
             break
 
-    # selection: delegated to the policy; every policy ranks correct
-    # patterns only — a penalized wrong result is never the chosen
-    # destination (it stays in records as evidence).  The constraint
-    # kwargs are only passed when set: a custom policy written against the
-    # pre-constraint select(records) signature keeps working until someone
-    # actually asks it for a constrained selection.
+    # selection: delegated to the policy via the Candidate contract
+    # (repro.core.candidates); every policy ranks correct patterns only — a
+    # penalized wrong result is never the chosen destination (it stays in
+    # records as evidence).  Candidates quack like records and delegate
+    # unknown reads to the wrapped record, so a custom policy written
+    # against record fields ranks them unchanged; unwrap() maps the winner
+    # back to the actual VerificationRecord (PlanReport.summary_rows
+    # compares by identity).  The constraint kwargs are only passed when
+    # set: a custom policy written against the pre-constraint
+    # select(records) signature keeps working until someone actually asks
+    # it for a constrained selection.
+    from repro.core.candidates import candidates_from_records, unwrap
+    cands = candidates_from_records(records, arch=app.name)
     if power_budget_w is not None or max_slowdown is not None:
-        selected = pol.select(records, power_budget_w=power_budget_w,
-                              max_slowdown=max_slowdown)
+        selected = unwrap(pol.select(cands, power_budget_w=power_budget_w,
+                                     max_slowdown=max_slowdown))
     else:
-        selected = pol.select(records)
+        selected = unwrap(pol.select(cands))
     return PlanReport(app=app.name, ref_time_s=ref_time, records=records,
                       selected=selected, early_stopped=early,
                       policy=pol.name)

@@ -1,0 +1,21 @@
+"""repro.fleet — many apps, one shared destination pool, one power cap.
+
+Public surface (stable — see ROADMAP "repro.fleet"):
+
+  * :class:`FleetApp` / :class:`PoolBackend` — the placement problem's
+    two sides (offered load + working set vs. slots + memory + envelope).
+  * :class:`FleetPlanner` — ``plan(apps)`` searches assignment vectors
+    with the paper's GA (greedy bin-packing seed), scored entirely from
+    warm :class:`~repro.core.plan_lookup.PlanLookup` payloads through
+    the :class:`~repro.core.candidates.Candidate` contract — zero new
+    compiles; ``replan(apps, placement, failed_backend)`` degrades
+    around a dead backend, keeping unaffected apps pinned.
+  * :class:`Placement` — the evaluated result (feasibility, violations,
+    fleet draw, joules-per-request).
+  * :func:`round_robin` — the static capacity-blind baseline.
+"""
+from repro.fleet.placement import (FleetApp, FleetPlanner, Placement,
+                                   PoolBackend, round_robin)
+
+__all__ = ["FleetApp", "PoolBackend", "FleetPlanner", "Placement",
+           "round_robin"]

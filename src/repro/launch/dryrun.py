@@ -235,11 +235,14 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     # cost policy assigns this cell — host-time / modeled rank pure step
     # time; price-weighted ranks step_time x chip count (throughput per
     # relative dollar); power ranks the cell's modeled joules per step and
-    # edp its energy-delay product.
+    # edp its energy-delay product.  A cell enters ranking as a Candidate
+    # (repro.core.candidates) like every other selection site.
     from repro.backends import get_policy
+    from repro.core.candidates import Candidate
     pol = get_policy(policy)
-    result["policy_score"] = pol.score_cell(
-        rl.step_time_s, price=float(n_chips), energy=result["energy"])
+    result["policy_score"] = pol.score_candidate(Candidate.from_cell(
+        rl.step_time_s, n_chips=float(n_chips), backend=mesh_kind,
+        arch=str(arch), energy=result["energy"]))
     return result
 
 
@@ -387,9 +390,10 @@ def main():
                 e_rep = cell_energy(r["roofline"], r["n_chips"])
                 energy = e_rep.to_dict() if e_rep is not None else None
                 r["energy"] = energy
-            score = pol.score_cell(r["roofline"]["step_time_s"],
-                                   price=float(r["n_chips"]),
-                                   energy=energy)
+            from repro.core.candidates import Candidate
+            score = pol.score_candidate(Candidate.from_cell(
+                r["roofline"]["step_time_s"], n_chips=float(r["n_chips"]),
+                backend=mesh_kind, arch=str(arch), energy=energy, ref=r))
             by_cell.setdefault((arch, shape), []).append((score, mesh_kind, r))
         for (arch, shape), cells in sorted(by_cell.items()):
             if len(cells) < 2:

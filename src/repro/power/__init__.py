@@ -21,10 +21,13 @@ Public surface (stable — later PRs build on this):
   * :class:`EnergyReport` — ``energy_j`` / ``avg_watts`` / ``edp`` /
     ``perf_per_watt`` per step.
   * :func:`energy_for_record` — the planner's per-record charge rule.
+  * :func:`fleet_draw_w` — the one definition of summed fleet draw
+    (Router admission headroom and the fleet planner's power cap);
+    ``PowerEnvelope.__add__`` composes co-located device envelopes.
 """
 from repro.power.envelope import (BY_ANALOGUE, FPGA_A10, GENERIC, GPU_T4,
                                   MANY_CORE_XEON, TPU_V5E_CHIP,
-                                  PowerEnvelope, envelope_for)
+                                  PowerEnvelope, envelope_for, fleet_draw_w)
 from repro.power.model import (EnergyModel, EnergyReport, cell_energy,
                                energy_for_record)
 
@@ -32,4 +35,5 @@ __all__ = [
     "PowerEnvelope", "EnergyModel", "EnergyReport",
     "MANY_CORE_XEON", "GPU_T4", "FPGA_A10", "TPU_V5E_CHIP", "GENERIC",
     "BY_ANALOGUE", "envelope_for", "energy_for_record", "cell_energy",
+    "fleet_draw_w",
 ]

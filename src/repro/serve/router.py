@@ -22,11 +22,11 @@ counter) stays flat, pinned by tests/test_serve_router.py.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 from repro.backends import SelectionPolicy, get_policy
-from repro.core.measure import CompiledCostRunner
+from repro.core.candidates import Candidate
 from repro.core.plan_lookup import PlanLookup, serve_key
 from repro.serve.metrics import ServeMetrics
 from repro.serve.request import Request
@@ -55,21 +55,6 @@ class Endpoint:
     def lookup_key(self):
         return serve_key(getattr(self.backend, "name", self.name),
                          self.arch, self.plan)
-
-
-@dataclass
-class _Candidate:
-    """Duck-typed record for SelectionPolicy.rank (the policies read
-    ``correct`` / ``best_time_s`` / ``price`` / ``mesh_time_s`` /
-    ``energy_j`` / ``avg_watts``)."""
-    endpoint: Endpoint
-    best_time_s: float
-    price: float
-    correct: bool = True
-    mesh_time_s: Optional[float] = None
-    energy_j: Optional[float] = None
-    avg_watts: Optional[float] = None
-    mesh_info: Dict = field(default_factory=dict)
 
 
 @dataclass
@@ -111,11 +96,17 @@ class Router:
         self.metrics = metrics if metrics is not None else ServeMetrics()
         # draw currently admitted per endpoint (watts, modeled at routing)
         self._draw_w: Dict[str, float] = {e.name: 0.0 for e in endpoints}
+        # admission ledger: rid -> (endpoint name, admitted draw).  The
+        # slot/draw accounting releases exactly what dispatch charged, once
+        # — a double complete (or completing a never-dispatched decision)
+        # must not leak negative draw into admission headroom.
+        self._admitted: Dict[str, Tuple[str, float]] = {}
 
     # ------------------------------------------------------------- state
     @property
     def fleet_draw_w(self) -> float:
-        return sum(self._draw_w.values())
+        from repro.power import fleet_draw_w
+        return fleet_draw_w(self._draw_w.values())
 
     def dispatch(self, decision: "RoutingDecision"):
         """Commit an accepted decision: occupy a slot, add its draw."""
@@ -123,23 +114,32 @@ class Router:
         if ep is None:
             raise ValueError(f"cannot dispatch rejected request "
                              f"{decision.rid}")
+        if decision.rid in self._admitted:
+            raise ValueError(f"request {decision.rid} is already dispatched")
         ep.in_flight += 1
-        if decision.avg_watts is not None:
-            self._draw_w[ep.name] += decision.avg_watts
+        draw = decision.avg_watts if decision.avg_watts is not None else 0.0
+        self._draw_w[ep.name] += draw
+        self._admitted[decision.rid] = (ep.name, draw)
 
-    def complete(self, decision: "RoutingDecision"):
-        """Release an admitted request's slot and draw."""
-        ep = decision.endpoint
-        if ep is None:
-            return
-        ep.in_flight = max(ep.in_flight - 1, 0)
-        if decision.avg_watts is not None:
-            self._draw_w[ep.name] = max(
-                self._draw_w[ep.name] - decision.avg_watts, 0.0)
+    def complete(self, decision: "RoutingDecision") -> bool:
+        """Release an admitted request's slot and draw.  Returns True when
+        the request was in flight; completing a rejected, never-dispatched
+        or already-completed decision is a no-op (the ledger guarantees
+        ``fleet_draw_w``/``in_flight`` can never go negative)."""
+        admitted = self._admitted.pop(decision.rid, None)
+        if admitted is None:
+            return False
+        name, draw = admitted
+        for ep in self.endpoints:
+            if ep.name == name:
+                ep.in_flight = max(ep.in_flight - 1, 0)
+                break
+        self._draw_w[name] = max(self._draw_w[name] - draw, 0.0)
+        return True
 
     # ----------------------------------------------------------- scoring
     def _score_endpoint(self, ep: Endpoint,
-                        req: Request) -> Optional[_Candidate]:
+                        req: Request) -> Optional[Candidate]:
         """Warm-path score of one endpoint for one request, or None when
         the endpoint cannot serve it (cold lookup, recorded failure, or a
         static lint error).  Pure arithmetic — no jax."""
@@ -157,26 +157,15 @@ class Router:
         payload = self.lookup.lookup(ep.lookup_key())
         if not self.lookup.usable(payload):
             return None             # cold or a recorded verification failure
-        runner = CompiledCostRunner(n_chips=ep.n_chips)
-        ev = runner.score_analysis(payload["analysis"], cache_hit=True)
-        if not ev.correct or ev.time_s == float("inf"):
-            return None
         # the warm analysis describes one decode step; the request costs
         # max_gen steps plus a prefill charged as prompt work at step rate
-        step_s = ev.time_s
-        service_s = step_s * (req.max_gen + req.prompt_len / 8.0)
-        rl = ev.info.get("roofline", {})
-        cand = _Candidate(
-            endpoint=ep, best_time_s=service_s,
-            price=getattr(ep.backend, "price", 1.0),
-            mesh_time_s=service_s, mesh_info={"roofline": rl})
-        from repro.power import EnergyModel, envelope_for
-        model = EnergyModel(envelope_for(ep.backend))
-        rep = model.from_roofline(rl) if rl else None
-        if rep is not None:
-            cand.avg_watts = rep.avg_watts
-            cand.energy_j = rep.avg_watts * service_s
-        return cand
+        return Candidate.from_analysis(
+            payload["analysis"], backend=ep.backend, arch=ep.arch,
+            n_chips=ep.n_chips,
+            scale=req.max_gen + req.prompt_len / 8.0,
+            plan_key=ep.plan.structural_key() if ep.plan is not None
+            else None,
+            ref=ep)
 
     # ----------------------------------------------------------- routing
     def route(self, req: Request) -> RoutingDecision:
@@ -206,9 +195,9 @@ class Router:
                                        reason="SLO infeasible",
                                        considered=len(cands))
         for cand in ranked:
-            if cand.endpoint.free_slots > 0:
+            if cand.ref.free_slots > 0:
                 return RoutingDecision(
-                    req.rid, cand.endpoint, reason="ok",
+                    req.rid, cand.ref, reason="ok",
                     service_time_s=cand.best_time_s,
                     energy_j=cand.energy_j, avg_watts=cand.avg_watts,
                     considered=len(cands))

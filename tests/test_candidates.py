@@ -1,0 +1,162 @@
+"""repro.core.candidates: the unified scoring datatype.
+
+Pins the refactor's equivalence contract: a Candidate built from any of
+the four source shapes (record / warm analysis / mesh cell / roofline)
+scores identically to the pre-refactor per-shape arithmetic, legacy
+custom policies keep working through the deprecation bridge, and ranking
+records directly vs. ranking their Candidate wrappers picks the same
+winner.
+"""
+import math
+
+import pytest
+
+from repro.backends import SelectionPolicy, get_policy
+from repro.backends.builtin import GPU
+from repro.core.candidates import (Candidate, candidates_from_records,
+                                   unwrap)
+from repro.power import GENERIC, GPU_T4, EnergyModel, cell_energy
+
+
+class FakeRecord:
+    def __init__(self, destination, best_time_s, *, correct=True,
+                 mesh_time_s=None, energy_j=None, avg_watts=None,
+                 price=1.0):
+        self.destination = destination
+        self.best_time_s = best_time_s
+        self.correct = correct
+        self.mesh_time_s = mesh_time_s
+        self.energy_j = energy_j
+        self.avg_watts = avg_watts
+        self.price = price
+        self.note = "extra field only the record has"
+
+
+def test_from_record_lifts_every_scoring_field():
+    rec = FakeRecord("gpu", 0.5, mesh_time_s=0.4, energy_j=20.0,
+                     avg_watts=50.0, price=2.0)
+    c = Candidate.from_record(rec)
+    assert (c.backend, c.best_time_s, c.price) == ("gpu", 0.5, 2.0)
+    assert c.mesh_time_s == 0.4 and c.energy_j == 20.0
+    assert c.avg_watts == 50.0 and c.correct and c.source == "record"
+    assert unwrap(c) is rec
+    # unknown attribute reads fall through to the wrapped record ...
+    assert c.destination == "gpu"
+    assert c.note == "extra field only the record has"
+    # ... but a bare Candidate still raises like any object
+    with pytest.raises(AttributeError):
+        _ = Candidate(best_time_s=1.0).no_such_field
+    assert unwrap(None) is None
+    assert unwrap(rec) is rec                        # non-Candidate passes
+
+
+def test_every_builtin_policy_scores_record_and_candidate_identically():
+    rec = FakeRecord("gpu", 0.5, mesh_time_s=0.4, energy_j=20.0,
+                     avg_watts=50.0, price=2.0)
+    bare = FakeRecord("cpu", 0.7)                    # nothing modeled
+    for name in ("host-time", "modeled", "price-weighted", "power", "edp"):
+        pol = get_policy(name)
+        for r in (rec, bare):
+            assert pol.score_candidate(Candidate.from_record(r)) \
+                == pytest.approx(pol.score(r))
+
+
+def test_rank_over_records_and_over_candidates_picks_the_same_winner():
+    records = [
+        FakeRecord("slow", 0.9, energy_j=10.0, avg_watts=11.0),
+        FakeRecord("fast", 0.3, energy_j=30.0, avg_watts=100.0),
+        FakeRecord("wrong", 0.1, correct=False),
+        FakeRecord("unfinished", math.inf),
+    ]
+    for name in ("host-time", "power", "edp"):
+        pol = get_policy(name)
+        direct = pol.select(records)
+        wrapped = unwrap(pol.select(candidates_from_records(records)))
+        assert wrapped is direct
+        # constraints survive the wrapping identically
+        direct_b = pol.select(records, power_budget_w=50.0)
+        wrapped_b = unwrap(pol.select(candidates_from_records(records),
+                                      power_budget_w=50.0))
+        assert wrapped_b is direct_b
+
+
+def test_legacy_score_parts_policy_ranks_candidates_via_the_bridge():
+    class Legacy(SelectionPolicy):
+        name = "test-legacy-parts"
+
+        def score_parts(self, time_s, price=1.0, modeled_s=None):
+            return (modeled_s if modeled_s is not None else time_s) * price
+
+    pol = Legacy()
+    c = Candidate(best_time_s=0.5, price=3.0, mesh_time_s=0.2)
+    assert pol.score_candidate(c) == pytest.approx(0.6)
+    assert pol.score(c) == pytest.approx(0.6)        # both faces agree
+
+    class LegacyScore(SelectionPolicy):
+        name = "test-legacy-score"
+
+        def score(self, record):
+            return record.best_time_s * 10.0
+
+    assert LegacyScore().score_candidate(c) == pytest.approx(5.0)
+
+    class Naked(SelectionPolicy):
+        name = "test-naked"
+
+    with pytest.raises(NotImplementedError):
+        Naked().score_candidate(c)
+
+
+def test_from_analysis_reproduces_the_router_arithmetic():
+    """Candidate.from_analysis is the router's pre-refactor
+    _score_endpoint arithmetic verbatim: score_analysis -> service
+    scaling -> envelope charge."""
+    from repro.core.measure import CompiledCostRunner
+    analysis = {"flops": 1e9, "bytes": 1e6, "collective_bytes": 0.0}
+    scale = 4 + 8 / 8.0                              # max_gen=4, prompt=8
+    c = Candidate.from_analysis(analysis, backend=GPU, n_chips=1,
+                                scale=scale)
+    ev = CompiledCostRunner(n_chips=1).score_analysis(dict(analysis),
+                                                      cache_hit=True)
+    service = ev.time_s * scale
+    assert c.best_time_s == pytest.approx(service)
+    assert c.mesh_time_s == pytest.approx(service)
+    assert c.price == GPU.price and c.backend == GPU.name
+    rep = EnergyModel(GPU_T4).from_roofline(ev.info["roofline"])
+    assert c.avg_watts == pytest.approx(rep.avg_watts)
+    assert c.energy_j == pytest.approx(rep.avg_watts * service)
+    # an explicit price overrides the backend's
+    priced = Candidate.from_analysis(analysis, backend=GPU, price=9.0)
+    assert priced.price == 9.0
+
+
+def test_from_cell_matches_the_old_score_cell_faces():
+    energy = {"energy_j": 12.0, "avg_watts": 60.0, "edp": 12.0 * 0.2}
+    c = Candidate.from_cell(0.2, n_chips=8.0, energy=energy)
+    assert get_policy("host-time").score_candidate(c) == pytest.approx(0.2)
+    assert get_policy("price-weighted").score_candidate(c) \
+        == pytest.approx(0.2 * 8.0)
+    assert get_policy("power").score_candidate(c) == pytest.approx(12.0)
+    assert get_policy("edp").score_candidate(c) \
+        == pytest.approx(energy["edp"])
+    # the deprecated face routes through the same Candidate
+    assert get_policy("power").score_cell(0.2, price=8.0, energy=energy) \
+        == pytest.approx(12.0)
+    # uncharged cells keep the historical price-scaled joule fallback
+    assert get_policy("power").score_cell(0.2, price=8.0) \
+        == pytest.approx(GENERIC.peak_w * 0.2 * 8.0)
+
+
+def test_from_roofline_charges_like_the_autoplan_rerank():
+    rl = {"step_time_s": 0.01, "compute_util": 0.5, "memory_util": 0.2,
+          "collective_util": 0.0, "bytes_per_device": 1e6}
+    c = Candidate.from_roofline(rl, n_chips=8, price=1.5, time_s=0.01)
+    rep = cell_energy(rl, 8)
+    assert c.energy_j == pytest.approx(rep.energy_j)
+    assert c.avg_watts == pytest.approx(rep.avg_watts)
+    assert get_policy("power").score_candidate(c) \
+        == pytest.approx(rep.energy_j)
+    assert get_policy("edp").score_candidate(c) \
+        == pytest.approx(rep.energy_j * 0.01)
+    assert get_policy("price-weighted").score_candidate(c) \
+        == pytest.approx(0.01 * 1.5)

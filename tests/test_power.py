@@ -427,3 +427,33 @@ def test_library_backend_offloads_via_function_block_db():
     # fastest AND cheapest: 0.1 s x 40 W beats everything
     assert report.selected is fb_rec
     assert report.selected.energy_j == pytest.approx(40.0 * 0.1)
+
+
+# -------------------------------------------- fleet draw aggregation (PR 8)
+def test_envelope_addition_sums_draws_and_mixes_memory_fraction():
+    a = PowerEnvelope("a", idle_w=10.0, peak_w=110.0,
+                      memory_w_fraction=0.2)
+    b = PowerEnvelope("b", idle_w=20.0, peak_w=320.0,
+                      memory_w_fraction=0.4)
+    c = a + b
+    assert c.idle_w == pytest.approx(30.0)
+    assert c.peak_w == pytest.approx(430.0)
+    # active-weighted mix: (100*0.2 + 300*0.4) / 400
+    assert c.memory_w_fraction == pytest.approx(0.35)
+    assert c.name == "a+b"
+    # sum() works via __radd__, and the operation is associative enough
+    # for fleet aggregation
+    total = sum([a, b, a])
+    assert total.peak_w == pytest.approx(540.0)
+    assert total.idle_w == pytest.approx(40.0)
+    with pytest.raises(TypeError):
+        a + 3.0
+
+
+def test_fleet_draw_w_is_the_shared_summation():
+    from repro.power import fleet_draw_w
+    assert fleet_draw_w([10.0, 20.0, 30.0]) == pytest.approx(60.0)
+    assert fleet_draw_w([]) == 0.0
+    # an unmodeled draw contributes nothing (callers drop unmodeled
+    # candidates at ranking time; the sum itself stays total-only)
+    assert fleet_draw_w([10.0, None, 5.0]) == pytest.approx(15.0)

@@ -1,0 +1,129 @@
+"""repro.runtime.fault_tolerance: direct unit coverage.
+
+The substrate tests exercise this module through full training loops; these
+pin the primitives themselves — ``StragglerWatchdog.record`` window
+semantics and ``run_resilient`` resume-from-checkpoint across separate
+invocations (the fleet replan path reuses the same degrade-and-continue
+contract).
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.runtime.fault_tolerance import StragglerWatchdog, run_resilient
+
+
+# ------------------------------------------------------------- watchdog
+def test_watchdog_needs_ten_samples_before_flagging():
+    wd = StragglerWatchdog(window=50, threshold=3.0)
+    for i in range(9):
+        assert not wd.record(i, 1.0)
+    # the 10th sample can flag — a 100x outlier against 9 stable steps
+    assert wd.record(9, 100.0)
+    assert wd.flagged[0]["step"] == 9
+    assert wd.flagged[0]["mean"] == pytest.approx(1.0)
+
+
+def test_watchdog_compares_against_previous_window_not_itself():
+    """The outlier is judged against times[:-1]: a big dt must not dilute
+    the statistics it is being compared to."""
+    wd = StragglerWatchdog()
+    for i in range(20):
+        wd.record(i, 1.0)
+    assert wd.record(20, 2.0)            # zero variance window: any jump
+    assert wd.flagged[-1]["std"] == pytest.approx(1e-9)
+
+
+def test_watchdog_window_evicts_old_samples():
+    wd = StragglerWatchdog(window=10, threshold=3.0)
+    for i in range(10):
+        wd.record(i, 10.0)               # old regime: slow steps
+    for i in range(10, 20):
+        wd.record(i, 1.0)                # new regime fills the window
+    assert len(wd.times) == 10
+    assert all(t == 1.0 for t in wd.times)
+    # 10.0 was normal under the old regime; after eviction it's an outlier
+    assert wd.record(20, 10.0)
+
+
+def test_watchdog_ewma_tracks_recent_steps():
+    wd = StragglerWatchdog(ewma_alpha=0.5)
+    wd.record(0, 1.0)
+    assert wd.ewma == pytest.approx(1.0)  # first sample seeds the EWMA
+    wd.record(1, 3.0)
+    assert wd.ewma == pytest.approx(2.0)
+    wd.record(2, 2.0)
+    assert wd.ewma == pytest.approx(2.0)
+
+
+def test_watchdog_steady_steps_never_flag():
+    wd = StragglerWatchdog(window=20, threshold=3.0)
+    flagged = [wd.record(i, 1.0 + 0.001 * (i % 3)) for i in range(100)]
+    assert not any(flagged)
+
+
+# -------------------------------------------------------- run_resilient
+def _counting_step(trace):
+    def step_fn(state, step):
+        trace.append(step)
+        return {"x": state["x"] + 1.0}, {"loss": float(step)}
+    return step_fn
+
+
+def test_run_resilient_resumes_from_checkpoint_across_invocations(tmp_path):
+    """The resume contract: a second invocation picks up at the persisted
+    ``next_step`` instead of recomputing from 0."""
+    ckpt = Checkpointer(tmp_path / "ck")
+    trace1 = []
+    res1 = run_resilient(total_steps=6, checkpointer=ckpt,
+                         init_state=lambda: {"x": np.float64(0.0)},
+                         step_fn=_counting_step(trace1), save_every=3,
+                         async_checkpoint=False)
+    assert res1.last_step == 6 and trace1 == [0, 1, 2, 3, 4, 5]
+    assert ckpt.latest_step() == 6
+
+    # a fresh loop (same directory) resumes: no step re-executed
+    trace2 = []
+    res2 = run_resilient(total_steps=10, checkpointer=ckpt,
+                         init_state=lambda: pytest.fail(
+                             "resume must not re-init state"),
+                         step_fn=_counting_step(trace2), save_every=3,
+                         async_checkpoint=False)
+    assert trace2 == [6, 7, 8, 9]
+    assert res2.last_step == 10 and res2.restarts == 0
+    state, extra = ckpt.restore()
+    assert extra["next_step"] == 10
+    assert float(state["x"]) == pytest.approx(10.0)
+
+
+def test_run_resilient_rolls_back_to_last_good_checkpoint(tmp_path):
+    ckpt = Checkpointer(tmp_path / "ck")
+    trace = []
+    boom = {"armed": True}
+
+    def fault_hook(step):
+        if step == 4 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected device halt")
+
+    res = run_resilient(total_steps=6, checkpointer=ckpt,
+                        init_state=lambda: {"x": np.float64(0.0)},
+                        step_fn=_counting_step(trace), save_every=3,
+                        fault_hook=fault_hook, async_checkpoint=False)
+    # the fault at 4 rolls back to the step-3 checkpoint: step 3 replays
+    assert res.restarts == 1 and res.last_step == 6
+    assert trace == [0, 1, 2, 3, 3, 4, 5]
+    assert float(ckpt.restore()[0]["x"]) == pytest.approx(6.0)
+
+
+def test_run_resilient_gives_up_after_max_restarts(tmp_path):
+    ckpt = Checkpointer(tmp_path / "ck")
+
+    def fault_hook(step):
+        raise RuntimeError("permanently broken")
+
+    with pytest.raises(RuntimeError, match="permanently broken"):
+        run_resilient(total_steps=4, checkpointer=ckpt,
+                      init_state=lambda: {"x": np.float64(0.0)},
+                      step_fn=_counting_step([]), max_restarts=2,
+                      fault_hook=fault_hook, async_checkpoint=False)

@@ -180,6 +180,38 @@ def test_power_budget_admission_rejects_when_fleet_saturated():
     assert router.route(req("r4")).accepted
 
 
+def test_double_complete_cannot_drive_accounting_negative():
+    """Satellite pin: the admission ledger releases exactly what dispatch
+    charged, once — double complete, completing a rejected decision, or
+    completing a routed-but-never-dispatched decision are all no-ops, and
+    double dispatch of one request is refused."""
+    cfg = get_config(ARCH).reduced()
+    lk = PlanLookup()
+    gpu, mc = make_endpoints(cfg)
+    warm(lk, gpu, mc)
+    router = Router([gpu, mc], lk, policy="modeled")
+    d = router.route(req("r1"))
+    assert d.accepted and d.avg_watts > 0
+    # routed but not dispatched: complete is a no-op
+    assert not router.complete(d)
+    assert router.fleet_draw_w == 0.0 and gpu.in_flight == 0
+    router.dispatch(d)
+    assert gpu.in_flight == 1
+    assert router.fleet_draw_w == pytest.approx(d.avg_watts)
+    with pytest.raises(ValueError):
+        router.dispatch(d)                           # double dispatch
+    assert router.complete(d)                        # the one real release
+    assert gpu.in_flight == 0 and router.fleet_draw_w == 0.0
+    assert not router.complete(d)                    # double complete
+    assert not router.complete(d)
+    assert gpu.in_flight == 0 and router.fleet_draw_w == 0.0
+    # a rejected decision never touches the ledger
+    rejected = router.route(req("slo", deadline_s=1e-12))
+    assert not rejected.accepted
+    assert not router.complete(rejected)
+    assert router.fleet_draw_w == 0.0
+
+
 def test_incorrect_record_backend_is_never_dispatched_to():
     cfg = get_config(ARCH).reduced()
     lk = PlanLookup()
