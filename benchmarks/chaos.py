@@ -1,0 +1,203 @@
+"""Chaos benchmark: kill an endpoint mid-trace, measure the recovery.
+
+The online control loop (``repro.runtime.control``) under its acceptance
+scenario as a measured artifact: a synthetic two-destination world (fast
+power-hungry vs slow frugal, both warm in one ``PlanLookup``), an open-loop
+request trace, and a fault plan that kills the fast endpoint mid-trace and
+revives it later.  The run reports:
+
+  * requests dropped (**must be 0** — failed requests re-queue and drain
+    through the admission ledger) and double completions (**must be 0**);
+  * recovery time in ticks: from the circuit opening (quarantine) to the
+    half-open probe that closes it (recovered);
+  * joules-per-request before the kill vs after recovery — the energy
+    price of degrading onto the frugal destination and back;
+  * whether any controller replan placed the app on a backend with a
+    published failure verdict (**must not happen**).
+
+Emits ``BENCH_chaos.json`` (a CI artifact next to BENCH_fleet.json) and
+exits 1 on any dropped request, any double completion, a never-recovered
+circuit, or a replan onto a failure-verdict backend.
+
+    PYTHONPATH=src python benchmarks/chaos.py [--out BENCH_chaos.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+TICK_S = 0.01
+
+
+class SyntheticBackend:
+    """Duck-typed repro.backends.Backend: name + power envelope."""
+
+    def __init__(self, name, power):
+        self.name = name
+        self.price = 1.0
+        self.paper_analogue = ""
+        self.power = power
+
+
+def build_world():
+    from repro.core.cost_model import PEAK_FLOPS
+    from repro.core.ga import GAConfig
+    from repro.core.plan_lookup import PlanLookup, serve_key
+    from repro.fleet import FleetApp, FleetPlanner, PoolBackend
+    from repro.power import PowerEnvelope
+    from repro.serve import Endpoint, HealthConfig, Router
+
+    lookup = PlanLookup()
+    hot_b = SyntheticBackend("hot", PowerEnvelope("hot", idle_w=100.0,
+                                                  peak_w=200.0))
+    cool_b = SyntheticBackend("cool", PowerEnvelope("cool", idle_w=5.0,
+                                                    peak_w=10.0))
+    # per-decode-step rooflines: hot is 4x faster but ~20x the draw
+    for name, step_t in (("hot", 0.005), ("cool", 0.02)):
+        lookup.register(serve_key(name, "app"),
+                        {"flops": step_t * PEAK_FLOPS, "bytes": 0.0,
+                         "collective_bytes": 0.0})
+    endpoints = [
+        Endpoint(name="hot0", backend=hot_b, arch="app", n_slots=8),
+        Endpoint(name="cool0", backend=cool_b, arch="app", n_slots=8),
+    ]
+    router = Router(endpoints, lookup, policy="modeled",
+                    health_cfg=HealthConfig(error_threshold=1,
+                                            backoff_ticks=4,
+                                            backoff_mult=2.0,
+                                            probe_quota=1,
+                                            probe_successes=1))
+    pool = [PoolBackend(name="hot", backend=hot_b, slots=16.0),
+            PoolBackend(name="cool", backend=cool_b, slots=16.0)]
+    apps = [FleetApp(name="app#0", arch="app", load_rps=1.0,
+                     tokens_per_request=2.0)]
+    planner = FleetPlanner(pool, lookup,
+                           ga_cfg=GAConfig(population=4, generations=4,
+                                           seed=0, cardinalities=[2]))
+    return router, planner, apps, lookup
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    ap.add_argument("--requests", type=int, default=120,
+                    help="open-loop trace length (one request per tick)")
+    ap.add_argument("--kill-at", type=int, default=20)
+    ap.add_argument("--revive-at", type=int, default=60)
+    args = ap.parse_args()
+
+    from repro.runtime.control import (ControlLoop, Fault, FaultInjector,
+                                       FleetController)
+    from repro.serve import Request
+    from repro.serve.health import HEALTHY, QUARANTINED
+
+    router, planner, apps, lookup = build_world()
+    placement = planner.plan(apps)
+    controller = FleetController(router, planner, apps,
+                                 placement=placement, tick_s=TICK_S)
+    trace = [Request(rid=f"r{i:04d}", arch="app", prompt_len=8, max_gen=1,
+                     arrival_s=i * TICK_S) for i in range(args.requests)]
+    injector = FaultInjector([Fault(kind="kill", endpoint="hot0",
+                                    at_tick=args.kill_at,
+                                    until_tick=args.revive_at)])
+    loop = ControlLoop(router, trace, controller=controller,
+                       injector=injector, tick_s=TICK_S,
+                       max_ticks=50 * args.requests)
+    misses0 = lookup.stats.misses
+    summary = loop.run()
+
+    failures = []
+    if summary["dropped"]:
+        failures.append(f"{len(summary['dropped'])} requests dropped: "
+                        f"{summary['dropped'][:5]}")
+    if summary["double_completed"]:
+        failures.append(f"{summary['double_completed']} double completions")
+    if summary["unrouted"]:
+        failures.append(f"{summary['unrouted']} requests never routed")
+    if lookup.stats.misses != misses0:
+        failures.append("the control loop compiled something "
+                        f"({lookup.stats.misses - misses0} new misses)")
+
+    # recovery time: circuit open (first quarantine) -> recovered
+    health = router.health["hot0"]
+    opened = [t["tick"] for t in health.transitions
+              if t["to"] == QUARANTINED]
+    recovered = [t["tick"] for t in health.transitions
+                 if t["to"] == HEALTHY and t["from"] != HEALTHY]
+    if not opened:
+        failures.append("the kill never opened the circuit")
+    if health.recoveries < 1 or not recovered:
+        failures.append("the circuit never recovered after the fault "
+                        "window")
+    recovery_ticks = (recovered[-1] - opened[0]) \
+        if opened and recovered else None
+
+    # replans must never land on a failure-verdict backend
+    replans = [e for e in controller.events if e["event"] == "replan"]
+    for e in replans:
+        for app_name, backend in e["by_app"].items():
+            from repro.core.plan_lookup import serve_key
+            payload = lookup.lookup(serve_key(backend, "app"))
+            if payload is not None and "error" in payload:
+                failures.append(f"replan at tick {e['tick']} placed "
+                                f"{app_name} on failure-verdict backend "
+                                f"{backend}")
+
+    # joules/request before the kill vs after recovery, from the realized
+    # per-request energy charges in the serve metrics
+    def joules_over(rids):
+        ms = [router.metrics.requests[r] for r in rids
+              if r in router.metrics.requests]
+        ms = [m for m in ms if m.service_s is not None]
+        return (sum(m.energy_j for m in ms) / len(ms)) if ms else None
+
+    pre = [r.rid for r in trace if r.arrival_s < args.kill_at * TICK_S]
+    post = [r.rid for r in trace
+            if recovery_ticks is not None
+            and r.arrival_s > recovered[-1] * TICK_S]
+    j_pre, j_post = joules_over(pre), joules_over(post)
+
+    out = {
+        "bench": "chaos",
+        "requests": args.requests,
+        "kill_at_tick": args.kill_at,
+        "revive_at_tick": args.revive_at,
+        "ticks": summary["ticks"],
+        "completed": summary["completed"],
+        "failed_attempts": summary["failed"],
+        "dropped": summary["dropped"],
+        "double_completed": summary["double_completed"],
+        "dispatches": summary["dispatches"],
+        "refusals": summary["refusals"],
+        "recovery_ticks": recovery_ticks,
+        "probe_cycles": len(opened),
+        "replans": len(replans),
+        "joules_per_request_before_kill": j_pre,
+        "joules_per_request_after_recovery": j_post,
+        "fleet_draw_w_max": summary["fleet_draw_w_max"],
+        "fleet_draw_w_min": summary["fleet_draw_w_min"],
+        "endpoint_summary": router.metrics.endpoint_summary(),
+        "failures": failures,
+    }
+    Path(args.out).write_text(json.dumps(out, indent=1))
+    print(f"chaos: {summary['completed']}/{args.requests} completed, "
+          f"0 dropped expected (got {len(summary['dropped'])}), "
+          f"recovery {recovery_ticks} ticks over {len(opened)} "
+          f"probe cycle(s)")
+    print(f"chaos: joules/request {j_pre if j_pre is not None else 'n/a'}"
+          f" (before kill) -> "
+          f"{j_post if j_post is not None else 'n/a'} (after recovery)")
+    print(f"wrote {args.out}")
+    if failures:
+        print("FAIL:", *failures, sep="\n  ")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,9 +13,12 @@ Public surface (stable — see ROADMAP "repro.fleet"):
   * :class:`Placement` — the evaluated result (feasibility, violations,
     fleet draw, joules-per-request).
   * :func:`round_robin` — the static capacity-blind baseline.
+  * :func:`observed_apps` — fold observed per-arch load (from
+    :class:`~repro.serve.ServeMetrics`) back into the app estimates; the
+    read side of the control loop's plan→serve→observe→replan cycle.
 """
 from repro.fleet.placement import (FleetApp, FleetPlanner, Placement,
-                                   PoolBackend, round_robin)
+                                   PoolBackend, observed_apps, round_robin)
 
 __all__ = ["FleetApp", "PoolBackend", "FleetPlanner", "Placement",
-           "round_robin"]
+           "round_robin", "observed_apps"]

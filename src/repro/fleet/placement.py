@@ -325,6 +325,28 @@ class FleetPlanner:
         return out
 
 
+def observed_apps(apps: Sequence[FleetApp],
+                  loads: Dict[str, float]) -> List[FleetApp]:
+    """Fold observed per-arch load back into the fleet's app estimates:
+    each app whose ``arch`` appears in ``loads`` gets the observed
+    requests/s, split evenly across the apps sharing that arch (the
+    router does not attribute requests to apps, only to archs).  Apps
+    with no observation keep their declared estimate — the controller's
+    plan→serve→observe→replan loop calls this before every replan."""
+    import dataclasses
+    share: Dict[str, int] = {}
+    for app in apps:
+        share[app.arch] = share.get(app.arch, 0) + 1
+    out: List[FleetApp] = []
+    for app in apps:
+        if app.arch in loads:
+            out.append(dataclasses.replace(
+                app, load_rps=loads[app.arch] / share[app.arch]))
+        else:
+            out.append(app)
+    return out
+
+
 def round_robin(apps: Sequence[FleetApp],
                 pool: Sequence[PoolBackend]) -> Tuple[int, ...]:
     """The static baseline the benchmark compares against: app i on

@@ -1,0 +1,45 @@
+"""repro.runtime — keep the selected destination honest while it runs.
+
+  * :mod:`repro.runtime.fault_tolerance` — degrade-and-continue execution
+    (:class:`StragglerWatchdog`, ``run_resilient``).
+  * :mod:`repro.runtime.elastic` — reshard-on-restore across mesh sizes;
+    :class:`ResizeEvent` / :func:`detect_resize` signal capacity changes.
+  * :mod:`repro.runtime.control` — the online fleet control loop
+    (:class:`FleetController`, :class:`FaultInjector`,
+    :class:`ControlLoop`) closing plan -> serve -> observe -> replan.
+
+Exports resolve lazily (PEP 562): importing :mod:`repro.runtime` pulls in
+no jax and does not eagerly import submodules, so the pure-arithmetic
+pieces (health, control) stay importable in jit-poisoned tests and
+lightweight tools.
+"""
+from typing import TYPE_CHECKING
+
+_EXPORTS = {
+    "Fault": "repro.runtime.control",
+    "FaultInjector": "repro.runtime.control",
+    "FleetController": "repro.runtime.control",
+    "ControlLoop": "repro.runtime.control",
+    "StragglerWatchdog": "repro.runtime.fault_tolerance",
+    "ResizeEvent": "repro.runtime.elastic",
+    "detect_resize": "repro.runtime.elastic",
+}
+
+__all__ = sorted(_EXPORTS)
+
+if TYPE_CHECKING:                               # pragma: no cover
+    from repro.runtime.control import (ControlLoop, Fault,  # noqa: F401
+                                       FaultInjector, FleetController)
+    from repro.runtime.elastic import (ResizeEvent,  # noqa: F401
+                                       detect_resize)
+    from repro.runtime.fault_tolerance import (  # noqa: F401
+        StragglerWatchdog)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

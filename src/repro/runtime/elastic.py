@@ -4,9 +4,15 @@ Checkpoints store full (global) arrays, so resharding is a pure placement
 decision at restore time.  ``reshard_restore`` rebuilds the sharding pytree
 for the *new* mesh from the model's logical axes and restores onto it —
 scale from 512 chips to 256 (or to this CPU host) without conversion.
+
+:class:`ResizeEvent` / :func:`detect_resize` are the signal side: an edge
+detector over the live device count that the online fleet controller
+(:class:`repro.runtime.control.FleetController.on_resize`) consumes to
+trigger a placement replan when a slice is lost or regained.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
@@ -14,6 +20,28 @@ import jax
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.dist.plan import Plan
 from repro.dist.sharding import Rules, tree_shardings
+
+
+@dataclass(frozen=True)
+class ResizeEvent:
+    """One observed change in usable capacity (devices, chips, slots)."""
+    tick: int
+    n_before: int
+    n_after: int
+
+    @property
+    def grew(self) -> bool:
+        return self.n_after > self.n_before
+
+
+def detect_resize(prev_n: Optional[int], n: int,
+                  tick: int = 0) -> Optional[ResizeEvent]:
+    """Edge-detect a capacity change: None while the count is stable (or
+    on the first observation), a :class:`ResizeEvent` on any transition —
+    the elastic-restart signal the fleet controller replans on."""
+    if prev_n is None or prev_n == n:
+        return None
+    return ResizeEvent(tick=tick, n_before=prev_n, n_after=n)
 
 
 def shardings_for(cfg, mesh, plan: Plan, tree_sds, axes_tree):

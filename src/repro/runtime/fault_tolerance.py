@@ -9,10 +9,14 @@ from __future__ import annotations
 
 import logging
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import TYPE_CHECKING, Any, Callable, Deque, Dict, List, Optional
 
-from repro.checkpoint.checkpointer import Checkpointer
+if TYPE_CHECKING:                                 # jax-free import path:
+    from repro.checkpoint.checkpointer import Checkpointer
+    # repro.serve.health reuses the watchdog on the serve hot path, so the
+    # heavyweight checkpointer (jax) import stays lazy in run_resilient
 
 log = logging.getLogger("repro.runtime")
 
@@ -24,25 +28,32 @@ class StragglerWatchdog:
     On multi-host deployments each host feeds its own step time; a rank
     whose time exceeds mean + threshold*std across the window is flagged
     (-> report for the scheduler to replace the node).  Single-process here:
-    flags slow *steps*, the same statistics path.
+    flags slow *steps*, the same statistics path.  The serve-time health
+    state machine (repro.serve.health) runs one per endpoint over observed
+    request latencies; ``reset()`` starts a fresh window when an endpoint
+    recovers, so post-recovery statistics are never judged against the
+    degraded regime.
     """
     window: int = 50
     threshold: float = 3.0
     ewma_alpha: float = 0.1
-    times: List[float] = field(default_factory=list)
+    times: Deque[float] = field(default_factory=deque)
     ewma: Optional[float] = None
     flagged: List[Dict] = field(default_factory=list)
+
+    def __post_init__(self):
+        # bounded ring buffer: append evicts the oldest sample for free
+        self.times = deque(self.times, maxlen=self.window)
 
     def record(self, step: int, dt: float) -> bool:
         import statistics
         self.times.append(dt)
-        if len(self.times) > self.window:
-            self.times.pop(0)
         self.ewma = dt if self.ewma is None else \
             self.ewma_alpha * dt + (1 - self.ewma_alpha) * self.ewma
         if len(self.times) >= 10:
-            mu = statistics.fmean(self.times[:-1])
-            sd = statistics.pstdev(self.times[:-1]) or 1e-9
+            prior = list(self.times)[:-1]
+            mu = statistics.fmean(prior)
+            sd = statistics.pstdev(prior) or 1e-9
             if dt > mu + self.threshold * sd:
                 self.flagged.append({"step": step, "dt": dt, "mean": mu,
                                      "std": sd})
@@ -50,6 +61,13 @@ class StragglerWatchdog:
                             step, dt, mu)
                 return True
         return False
+
+    def reset(self):
+        """Start a fresh window (per-endpoint reuse after recovery): the
+        sample window and EWMA restart cold; ``flagged`` keeps its history
+        — past flags are a record, not current state."""
+        self.times.clear()
+        self.ewma = None
 
 
 @dataclass
@@ -63,7 +81,7 @@ class ResilientLoopResult:
 def run_resilient(
     *,
     total_steps: int,
-    checkpointer: Checkpointer,
+    checkpointer: "Checkpointer",
     init_state: Callable[[], Any],
     step_fn: Callable[[Any, int], tuple],        # (state, step) -> (state, metrics)
     save_every: int = 50,

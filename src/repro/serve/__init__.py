@@ -18,13 +18,25 @@ study (arXiv 2110.11520):
     ``Model.prefill`` / ``Model.decode_step``: requests join and leave the
     running batch at decode-step granularity over a fixed-shape slot pool,
     so the jitted step traces exactly once.
-  * :class:`ServeMetrics` — queue/TTFT/TPOT/tok-s counters and per-request
-    joule charges.
+  * :class:`ServeMetrics` — queue/TTFT/TPOT/tok-s counters, per-request
+    joule charges, refusal-reason counts and per-endpoint latency
+    percentiles.
+  * :class:`EndpointHealth` / :class:`HealthConfig` — the per-endpoint
+    health state machine (healthy → degraded → quarantined → probing →
+    recovered) the Router consults on every route: latency-EWMA
+    degradation with a score penalty, a circuit breaker with
+    exponential-backoff half-open probes, and drain-based removal.  The
+    online control loop that drives it lives in
+    :mod:`repro.runtime.control`.
 """
 from repro.serve.batching import ContinuousBatcher
+from repro.serve.health import (DEGRADED, HEALTH_STATES, HEALTHY, PROBING,
+                                QUARANTINED, EndpointHealth, HealthConfig)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.request import Request
 from repro.serve.router import Endpoint, Router, RoutingDecision
 
 __all__ = ["Request", "Router", "Endpoint", "RoutingDecision",
-           "ContinuousBatcher", "ServeMetrics"]
+           "ContinuousBatcher", "ServeMetrics",
+           "EndpointHealth", "HealthConfig", "HEALTH_STATES",
+           "HEALTHY", "DEGRADED", "QUARANTINED", "PROBING"]

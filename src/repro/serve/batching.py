@@ -139,7 +139,7 @@ class ContinuousBatcher:
             raise ValueError(
                 f"request {req.rid} wants arch {req.arch!r}, engine serves "
                 f"{self.cfg.name!r} (route first: repro.serve.router)")
-        self.metrics.on_submit(req.rid, req.arrival_s)
+        self.metrics.on_submit(req.rid, req.arrival_s, arch=req.arch)
         self._pending.append(req)
         self._pending.sort(key=lambda r: (r.arrival_s, r.rid))
 

@@ -40,7 +40,10 @@ class RequestMetrics:
     finish_s: Optional[float] = None
     n_tokens: int = 0
     energy_j: float = 0.0
-    rejected: Optional[str] = None          # rejection reason, if any
+    rejected: Optional[str] = None          # last rejection reason, if any
+    arch: Optional[str] = None              # requested architecture
+    endpoint: Optional[str] = None          # endpoint it dispatched to
+    service_s: Optional[float] = None       # observed service latency
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -61,6 +64,7 @@ class RequestMetrics:
 class ServeMetrics:
     requests: Dict[str, RequestMetrics] = field(default_factory=dict)
     rejected: int = 0
+    refusals: Dict[str, int] = field(default_factory=dict)
     ticks: int = 0
     total_energy_j: float = 0.0
     _span_start: Optional[float] = None
@@ -73,18 +77,43 @@ class ServeMetrics:
             m = self.requests[rid] = RequestMetrics(rid)
         return m
 
-    def on_submit(self, rid: str, t: float):
+    def on_submit(self, rid: str, t: float, arch: Optional[str] = None):
         m = self._get(rid)
         m.submit_s = t
+        if arch is not None:
+            m.arch = arch
         self._span_start = t if self._span_start is None \
             else min(self._span_start, t)
 
     def on_reject(self, rid: str, reason: str):
+        """One refusal event.  A queued request that is re-routed every
+        tick counts one event per attempt — ``refusals`` is the operator's
+        view of *why* admission is failing, not a unique-request count."""
         self._get(rid).rejected = reason
         self.rejected += 1
+        self.refusals[reason] = self.refusals.get(reason, 0) + 1
 
     def on_admit(self, rid: str, t: float):
         self._get(rid).admit_s = t
+
+    def on_dispatch(self, rid: str, endpoint: str):
+        """The router committed the request to ``endpoint``."""
+        self._get(rid).endpoint = endpoint
+
+    def on_complete(self, rid: str, *, latency_s: Optional[float] = None,
+                    energy_j: Optional[float] = None,
+                    t: Optional[float] = None):
+        """A routed request finished service: observed latency (feeds the
+        per-endpoint percentiles the health state machine also reads) and
+        its realized energy charge."""
+        m = self._get(rid)
+        if latency_s is not None:
+            m.service_s = latency_s
+        if energy_j is not None:
+            m.energy_j += energy_j
+            self.total_energy_j += energy_j
+        if t is not None:
+            self.on_finish(rid, t)
 
     def on_token(self, rid: str, t: float, n: int = 1):
         m = self._get(rid)
@@ -113,6 +142,24 @@ class ServeMetrics:
             self._get(rid).energy_j += share
 
     # ----------------------------------------------------------- summary
+    def endpoint_summary(self) -> Dict[str, dict]:
+        """Per-endpoint completed counts and service-latency percentiles —
+        the same numbers the health state machine's EWMA digests, so
+        operators and the circuit breaker read one source of truth."""
+        per: Dict[str, List[float]] = {}
+        for m in self.requests.values():
+            if m.endpoint is None or m.service_s is None:
+                continue
+            per.setdefault(m.endpoint, []).append(m.service_s)
+        return {
+            name: {
+                "completed": len(lats),
+                "latency_p50_s": percentile(lats, 50),
+                "latency_p95_s": percentile(lats, 95),
+            }
+            for name, lats in sorted(per.items())
+        }
+
     def summary(self) -> dict:
         done = [m for m in self.requests.values() if m.finish_s is not None]
         ttfts = [m.ttft_s for m in done if m.ttft_s is not None]
@@ -125,6 +172,7 @@ class ServeMetrics:
         return {
             "completed": len(done),
             "rejected": self.rejected,
+            "refusals": dict(self.refusals),
             "ticks": self.ticks,
             "tokens": tokens,
             "span_s": span,
@@ -135,4 +183,5 @@ class ServeMetrics:
             "total_energy_j": self.total_energy_j,
             "joules_per_request": (self.total_energy_j / len(done))
             if done else None,
+            "endpoints": self.endpoint_summary(),
         }

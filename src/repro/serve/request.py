@@ -25,6 +25,7 @@ class Request:
     arrival_s: float = 0.0
     tokens: Any = None
     extras: Dict[str, Any] = field(default_factory=dict)
+    retries: int = 0                        # re-dispatches after a failure
 
     def __post_init__(self):
         if self.prompt_len < 1:

@@ -28,6 +28,8 @@ from typing import Dict, List, Optional, Tuple
 from repro.backends import SelectionPolicy, get_policy
 from repro.core.candidates import Candidate
 from repro.core.plan_lookup import PlanLookup, serve_key
+from repro.serve.health import (DEGRADED, PROBING, EndpointHealth,
+                                HealthConfig)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.request import Request
 
@@ -47,6 +49,7 @@ class Endpoint:
     engine: object = None           # optional ContinuousBatcher
     # live state the router maintains
     in_flight: int = 0
+    draining: bool = False          # no new dispatches; in-flight completes
 
     @property
     def free_slots(self) -> int:
@@ -83,7 +86,8 @@ class Router:
 
     def __init__(self, endpoints: List[Endpoint], lookup: PlanLookup, *,
                  policy=None, power_budget_w: Optional[float] = None,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 health_cfg: Optional[HealthConfig] = None):
         if not endpoints:
             raise ValueError("router needs at least one endpoint")
         names = [e.name for e in endpoints]
@@ -94,13 +98,24 @@ class Router:
         self.policy: SelectionPolicy = get_policy(policy)
         self.power_budget_w = power_budget_w
         self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.health_cfg = health_cfg if health_cfg is not None \
+            else HealthConfig()
+        # per-endpoint health state machines (repro.serve.health): pure
+        # arithmetic, fed from the admission ledger on complete/fail
+        self.health: Dict[str, EndpointHealth] = {
+            e.name: EndpointHealth(e.name, self.health_cfg)
+            for e in endpoints}
         # draw currently admitted per endpoint (watts, modeled at routing)
         self._draw_w: Dict[str, float] = {e.name: 0.0 for e in endpoints}
-        # admission ledger: rid -> (endpoint name, admitted draw).  The
-        # slot/draw accounting releases exactly what dispatch charged, once
-        # — a double complete (or completing a never-dispatched decision)
-        # must not leak negative draw into admission headroom.
-        self._admitted: Dict[str, Tuple[str, float]] = {}
+        # endpoints removed while requests were still in flight: their
+        # ledger entries stay completable (draw released on complete),
+        # never orphaned — the entry is dropped once the last one drains
+        self._removed: Dict[str, Endpoint] = {}
+        # admission ledger: rid -> (endpoint name, admitted draw, probe).
+        # The slot/draw accounting releases exactly what dispatch charged,
+        # once — a double complete (or completing a never-dispatched
+        # decision) must not leak negative draw into admission headroom.
+        self._admitted: Dict[str, Tuple[str, float, bool]] = {}
 
     # ------------------------------------------------------------- state
     @property
@@ -108,6 +123,57 @@ class Router:
         from repro.power import fleet_draw_w
         return fleet_draw_w(self._draw_w.values())
 
+    def endpoint(self, name: str) -> Optional[Endpoint]:
+        """Live endpoint by name (None when absent or already removed)."""
+        for ep in self.endpoints:
+            if ep.name == name:
+                return ep
+        return None
+
+    def in_flight_of(self, name: str) -> int:
+        """Admitted-but-uncompleted requests on ``name`` per the ledger
+        (authoritative — survives endpoint removal)."""
+        return sum(1 for n, _, _ in self._admitted.values() if n == name)
+
+    # ------------------------------------------------- endpoint lifecycle
+    def add_endpoint(self, ep: Endpoint):
+        """Register a new live endpoint (elastic grow / re-admission)."""
+        if self.endpoint(ep.name) is not None or ep.name in self._removed:
+            raise ValueError(f"endpoint {ep.name!r} already registered")
+        self.endpoints.append(ep)
+        self._draw_w.setdefault(ep.name, 0.0)
+        self.health[ep.name] = EndpointHealth(ep.name, self.health_cfg)
+
+    def drain(self, name: str) -> Endpoint:
+        """Stop dispatching to ``name``; in-flight requests keep their
+        slots and complete normally.  The migration primitive: drain, wait
+        for :meth:`drained`, then :meth:`remove_endpoint`."""
+        ep = self.endpoint(name)
+        if ep is None:
+            raise ValueError(f"unknown endpoint {name!r}")
+        ep.draining = True
+        return ep
+
+    def drained(self, name: str) -> bool:
+        """True once ``name`` has no admitted request left in the ledger."""
+        return self.in_flight_of(name) == 0
+
+    def remove_endpoint(self, name: str) -> Endpoint:
+        """Take ``name`` out of routing entirely.  With requests still in
+        flight its ledger entries remain completable — draw and slot
+        accounting release on ``complete`` exactly as if it were live —
+        and the draw entry is dropped only once fully drained."""
+        ep = self.endpoint(name)
+        if ep is None:
+            raise ValueError(f"unknown endpoint {name!r}")
+        self.endpoints = [e for e in self.endpoints if e.name != name]
+        if self.in_flight_of(name) > 0:
+            self._removed[name] = ep
+        else:
+            self._draw_w.pop(name, None)
+        return ep
+
+    # ---------------------------------------------------------- dispatch
     def dispatch(self, decision: "RoutingDecision"):
         """Commit an accepted decision: occupy a slot, add its draw."""
         ep = decision.endpoint
@@ -118,24 +184,60 @@ class Router:
             raise ValueError(f"request {decision.rid} is already dispatched")
         ep.in_flight += 1
         draw = decision.avg_watts if decision.avg_watts is not None else 0.0
-        self._draw_w[ep.name] += draw
-        self._admitted[decision.rid] = (ep.name, draw)
+        self._draw_w[ep.name] = self._draw_w.get(ep.name, 0.0) + draw
+        health = self.health.get(ep.name)
+        probe = health is not None and health.state == PROBING
+        if probe:
+            health.on_probe_dispatch()
+        self._admitted[decision.rid] = (ep.name, draw, probe)
+        self.metrics.on_dispatch(decision.rid, ep.name)
 
-    def complete(self, decision: "RoutingDecision") -> bool:
+    def complete(self, decision: "RoutingDecision", *,
+                 latency_s: Optional[float] = None, ok: bool = True,
+                 error: str = "", now_s: Optional[float] = None) -> bool:
         """Release an admitted request's slot and draw.  Returns True when
         the request was in flight; completing a rejected, never-dispatched
         or already-completed decision is a no-op (the ledger guarantees
-        ``fleet_draw_w``/``in_flight`` can never go negative)."""
+        ``fleet_draw_w``/``in_flight`` can never go negative).
+
+        The optional observation feeds the endpoint's health state
+        machine: ``latency_s`` is the observed service latency, ``ok``
+        False reports a failure (``error`` its reason — see :meth:`fail`),
+        ``now_s`` stamps the finish time into the metrics."""
         admitted = self._admitted.pop(decision.rid, None)
         if admitted is None:
             return False
-        name, draw = admitted
-        for ep in self.endpoints:
-            if ep.name == name:
-                ep.in_flight = max(ep.in_flight - 1, 0)
-                break
-        self._draw_w[name] = max(self._draw_w[name] - draw, 0.0)
+        name, draw, probe = admitted
+        ep = self.endpoint(name) or self._removed.get(name)
+        if ep is not None:
+            ep.in_flight = max(ep.in_flight - 1, 0)
+        if name in self._draw_w:
+            self._draw_w[name] = max(self._draw_w[name] - draw, 0.0)
+        if name in self._removed and self.in_flight_of(name) == 0:
+            self._removed.pop(name)
+            self._draw_w.pop(name, None)
+        health = self.health.get(name)
+        if health is not None:
+            if ok:
+                if latency_s is not None:
+                    health.observe_latency(latency_s)
+                health.observe_success(probe=probe)
+            else:
+                health.observe_error(error or "error", probe=probe)
+        if ok:
+            energy = None
+            if decision.avg_watts is not None and latency_s is not None:
+                energy = decision.avg_watts * latency_s
+            self.metrics.on_complete(decision.rid, latency_s=latency_s,
+                                     energy_j=energy, t=now_s)
         return True
+
+    def fail(self, decision: "RoutingDecision", reason: str = "error",
+             now_s: Optional[float] = None) -> bool:
+        """Report a failed request: releases the ledger entry and feeds an
+        error to the endpoint's circuit breaker.  The caller owns the
+        retry (the request was not served)."""
+        return self.complete(decision, ok=False, error=reason, now_s=now_s)
 
     # ----------------------------------------------------------- scoring
     def _score_endpoint(self, ep: Endpoint,
@@ -170,14 +272,39 @@ class Router:
     # ----------------------------------------------------------- routing
     def route(self, req: Request) -> RoutingDecision:
         """Choose an endpoint for one request (does not dispatch — call
-        :meth:`dispatch` on an accepted decision to commit it)."""
-        self.metrics.on_submit(req.rid, req.arrival_s)
-        cands = [c for c in (self._score_endpoint(ep, req)
-                             for ep in self.endpoints) if c is not None]
+        :meth:`dispatch` on an accepted decision to commit it).
+
+        Health gating: quarantined (and draining) endpoints are skipped
+        outright; a probing endpoint is considered only while its
+        half-open probe quota has room; a degraded endpoint stays rankable
+        but its candidate is penalized by ``HealthConfig.degraded_penalty``
+        — traffic shifts away gradually instead of falling off a cliff."""
+        self.metrics.on_submit(req.rid, req.arrival_s, arch=req.arch)
+        cands = []
+        unavailable = 0
+        for ep in self.endpoints:
+            health = self.health.get(ep.name)
+            if ep.draining or (health is not None and not health.available):
+                unavailable += 1
+                continue
+            cand = self._score_endpoint(ep, req)
+            if cand is None:
+                continue
+            if health is not None and health.state == DEGRADED:
+                pen = health.penalty
+                cand.best_time_s *= pen
+                if cand.mesh_time_s is not None:
+                    cand.mesh_time_s *= pen
+                if cand.energy_j is not None:
+                    cand.energy_j *= pen
+                cand.info["health"] = DEGRADED
+            cands.append(cand)
         if not cands:
-            self.metrics.on_reject(req.rid, "no feasible endpoint")
-            return RoutingDecision(req.rid, None,
-                                   reason="no feasible endpoint")
+            reason = "endpoint quarantined" \
+                if unavailable == len(self.endpoints) and unavailable > 0 \
+                else "no feasible endpoint"
+            self.metrics.on_reject(req.rid, reason)
+            return RoutingDecision(req.rid, None, reason=reason)
         headroom = None
         if self.power_budget_w is not None:
             headroom = self.power_budget_w - self.fleet_draw_w

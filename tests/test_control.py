@@ -1,0 +1,363 @@
+"""repro.runtime.control: the closed plan -> serve -> observe -> replan loop.
+
+Pins the PR's acceptance scenario: an endpoint killed mid-trace opens its
+circuit, the quarantined endpoint receives zero non-probe dispatches,
+in-flight requests drain to completion (zero dropped, zero
+double-completed), the FleetController replans without placing on the
+failed backend, and a half-open probe restores the endpoint after the
+fault window — all on a deterministic tick clock with zero new XLA
+compiles (jit-poisoned, like the router's and the fleet planner's pins).
+"""
+import pytest
+
+from repro.core.cost_model import PEAK_FLOPS
+from repro.core.ga import GAConfig
+from repro.core.plan_lookup import PlanLookup, serve_key
+from repro.fleet import FleetApp, FleetPlanner, PoolBackend, observed_apps
+from repro.power import PowerEnvelope
+from repro.runtime.control import (ControlLoop, Fault, FaultInjector,
+                                   FleetController)
+from repro.serve import Endpoint, HealthConfig, Request, Router
+from repro.serve.health import HEALTHY, PROBING, QUARANTINED
+
+TICK_S = 0.01
+
+
+class FakeBackend:
+    def __init__(self, name, power=None):
+        self.name = name
+        self.price = 1.0
+        self.paper_analogue = ""
+        self.power = power
+
+
+HOT = PowerEnvelope("hot", idle_w=100.0, peak_w=200.0)
+COOL = PowerEnvelope("cool", idle_w=5.0, peak_w=10.0)
+
+
+def warm_time(lookup, backend_name, arch, t):
+    lookup.register(serve_key(backend_name, arch),
+                    {"flops": t * PEAK_FLOPS, "bytes": 0.0,
+                     "collective_bytes": 0.0})
+
+
+def req(rid, tick, *, arch="m0", max_gen=1):
+    # scale = max_gen + prompt_len/8 = 2 decode-steps of modeled work
+    return Request(rid=rid, arch=arch, prompt_len=8, max_gen=max_gen,
+                   arrival_s=tick * TICK_S)
+
+
+def make_world(*, hot_t=0.005, cool_t=0.02, load_rps=1.0,
+               power_budget_w=None, health_cfg=None, n_slots=4):
+    """One app, two destinations: hot0 (fast, hungry) and cool0 (slow,
+    frugal), Router endpoints and FleetPlanner pool sharing one lookup
+    and one backend namespace so serve keys line up."""
+    lookup = PlanLookup()
+    hot_b, cool_b = FakeBackend("hot", HOT), FakeBackend("cool", COOL)
+    warm_time(lookup, "hot", "m0", hot_t)
+    warm_time(lookup, "cool", "m0", cool_t)
+    hot0 = Endpoint(name="hot0", backend=hot_b, arch="m0", n_slots=n_slots)
+    cool0 = Endpoint(name="cool0", backend=cool_b, arch="m0",
+                     n_slots=n_slots)
+    cfg = health_cfg if health_cfg is not None else HealthConfig(
+        error_threshold=1, backoff_ticks=4, backoff_mult=2.0,
+        probe_quota=1, probe_successes=1)
+    router = Router([hot0, cool0], lookup, policy="modeled",
+                    health_cfg=cfg)
+    pool = [PoolBackend(name="hot", backend=hot_b, slots=16.0),
+            PoolBackend(name="cool", backend=cool_b, slots=16.0)]
+    apps = [FleetApp(name="a0", arch="m0", load_rps=load_rps,
+                     tokens_per_request=2.0)]
+    planner = FleetPlanner(pool, lookup, power_budget_w=power_budget_w,
+                           ga_cfg=GAConfig(population=4, generations=4,
+                                           seed=0, cardinalities=[2]))
+    return router, planner, apps, lookup, (hot0, cool0)
+
+
+# ------------------------------------------------------------ fault plans
+def test_fault_windows_are_pure_functions_of_tick():
+    inj = FaultInjector([
+        Fault(kind="kill", endpoint="a", at_tick=5, until_tick=10),
+        Fault(kind="latency", endpoint="a", at_tick=0, until_tick=4,
+              factor=3.0),
+        Fault(kind="latency", endpoint="a", at_tick=2, until_tick=4,
+              factor=2.0),
+        Fault(kind="wrong_result", endpoint="b", at_tick=7),
+        Fault(kind="power_spike", endpoint="b", at_tick=1, until_tick=3,
+              factor=40.0),
+    ])
+    assert not inj.is_dead("a", 4) and inj.is_dead("a", 5)
+    assert inj.is_dead("a", 9) and not inj.is_dead("a", 10)
+    assert inj.latency_factor("a", 1) == pytest.approx(3.0)
+    assert inj.latency_factor("a", 3) == pytest.approx(6.0)  # compounds
+    assert inj.latency_factor("a", 4) == 1.0
+    assert inj.latency_factor("b", 3) == 1.0                 # scoped
+    assert not inj.wrong_result("b", 6)
+    assert inj.wrong_result("b", 7) and inj.wrong_result("b", 10_000)
+    assert inj.power_spike_w("b", 2) == pytest.approx(40.0)
+    assert inj.power_spike_w("b", 3) == 0.0
+    # querying never mutates: same answers on replay
+    assert inj.is_dead("a", 5) and inj.latency_factor("a", 3) == 6.0
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        Fault(kind="meteor", endpoint="a", at_tick=0)
+    with pytest.raises(ValueError):
+        Fault(kind="kill", endpoint="a", at_tick=5, until_tick=5)
+
+
+# ------------------------------------------------- the acceptance scenario
+def test_chaos_kill_quarantine_drain_replan_probe_recover(monkeypatch):
+    """The PR's acceptance pin, end to end on one deterministic clock."""
+    router, planner, apps, lookup, (hot0, cool0) = make_world()
+    placement = planner.plan(apps)
+    assert placement.feasible and placement.by_app["a0"] == "hot"
+    ctl = FleetController(router, planner, apps, placement=placement,
+                          tick_s=TICK_S)
+    kill = Fault(kind="kill", endpoint="hot0", at_tick=10, until_tick=30)
+    loop = ControlLoop(
+        router, [req(f"r{i:03d}", i) for i in range(60)],
+        controller=ctl, injector=FaultInjector([kill]), tick_s=TICK_S)
+
+    import jax
+
+    def poisoned(*a, **kw):
+        raise AssertionError("control loop attempted a jax trace")
+
+    monkeypatch.setattr(jax, "jit", poisoned)
+    monkeypatch.setattr(jax, "vmap", poisoned)
+    misses0 = lookup.stats.misses
+    lookups0 = lookup.stats.lookups
+
+    out = loop.run()
+
+    # zero-compile: the whole loop re-scored through PlanLookup only
+    assert lookup.stats.misses == misses0
+    assert lookup.stats.lookups > lookups0
+
+    # every request completes exactly once: no drops, no double counting
+    assert out["completed"] == 60
+    assert out["dropped"] == []
+    assert out["double_completed"] == 0
+    assert out["failed"] >= 1                    # the kill was really felt
+    assert out["fleet_draw_w_min"] >= 0.0
+
+    # the circuit opened at the kill and closed only after the window
+    health = router.health["hot0"]
+    seq = [(t["from"], t["to"]) for t in health.transitions]
+    assert (HEALTHY, QUARANTINED) == seq[0]
+    assert (QUARANTINED, PROBING) in seq
+    assert (PROBING, QUARANTINED) in seq         # a probe died in-window
+    assert seq[-1] == (PROBING, HEALTHY)         # recovered post-window
+    assert health.recoveries == 1
+    recovered_tick = health.transitions[-1]["tick"]
+    assert recovered_tick >= 30
+
+    # while quarantined, hot0 saw zero non-probe dispatches: every
+    # dispatch inside the fault window was a half-open probe that died
+    quarantined_at = health.transitions[0]["tick"]
+    in_window = [t for t, _, name in loop.dispatch_log
+                 if name == "hot0" and quarantined_at < t < 30]
+    probe_failures = sum(1 for a, b in seq if (a, b) ==
+                         (PROBING, QUARANTINED))
+    assert len(in_window) == probe_failures      # probes only, nothing else
+    # after recovery the fast endpoint carries traffic again
+    assert any(name == "hot0" and t > recovered_tick
+               for t, _, name in loop.dispatch_log)
+
+    # the controller replanned off the failed backend without placing on it
+    replans = [e for e in ctl.events if e["event"] == "replan"]
+    assert replans and replans[0]["failed"] == "hot"
+    assert replans[0]["by_app"]["a0"] == "cool"
+    assert all(e["fleet_draw_w"] >= 0.0 for e in replans)
+
+    # in-flight work admitted before the kill drained through the ledger
+    assert router.fleet_draw_w == 0.0
+    assert all(ep.in_flight == 0 for ep in router.endpoints)
+
+
+def test_chaos_replay_is_deterministic():
+    """Same fault plan + same trace => identical summary, tick for tick."""
+    def run_once():
+        router, planner, apps, _, _ = make_world()
+        ctl = FleetController(router, planner, apps,
+                              placement=planner.plan(apps), tick_s=TICK_S)
+        loop = ControlLoop(
+            router, [req(f"r{i:03d}", i) for i in range(40)],
+            controller=ctl,
+            injector=FaultInjector([Fault(kind="kill", endpoint="hot0",
+                                          at_tick=8, until_tick=20)]),
+            tick_s=TICK_S)
+        out = loop.run()
+        return out, loop.dispatch_log
+
+    (out_a, log_a), (out_b, log_b) = run_once(), run_once()
+    assert log_a == log_b
+    for key in ("ticks", "completed", "failed", "dropped",
+                "double_completed", "dispatches", "refusals"):
+        assert out_a[key] == out_b[key], key
+
+
+# ------------------------------------------------------------ wrong result
+def test_wrong_result_publishes_failure_and_replan_avoids_the_backend():
+    """A wrong result is the online form of a verification failure: the
+    request fails, the verdict lands in the lookup, and neither the
+    router nor the next replan ever uses that destination again."""
+    router, planner, apps, lookup, _ = make_world()
+    ctl = FleetController(router, planner, apps,
+                          placement=planner.plan(apps), tick_s=TICK_S)
+    loop = ControlLoop(
+        router, [req(f"r{i:02d}", i * 2) for i in range(10)],
+        controller=ctl,
+        injector=FaultInjector([Fault(kind="wrong_result",
+                                      endpoint="hot0", at_tick=0)]),
+        tick_s=TICK_S)
+    out = loop.run()
+    assert out["completed"] == 10 and out["dropped"] == []
+    # the verdict is published: the key refuses statically from now on
+    assert not lookup.usable(lookup.lookup(serve_key("hot", "m0")))
+    # the wrongdoer saw exactly one dispatch — the one that caught it
+    assert out["dispatches"]["hot0"] == 1
+    assert out["dispatches"]["cool0"] == 10
+    # and the replan (triggered by the quarantine) avoided it
+    replans = [e for e in ctl.events if e["event"] == "replan"]
+    assert replans and all(e["by_app"]["a0"] == "cool" for e in replans)
+    assert ctl.placement.feasible
+    assert ctl.placement.by_app["a0"] == "cool"
+
+
+# --------------------------------------------------- drain-based migration
+def test_observed_load_replans_and_migrates_by_draining():
+    """Observed load (not the declared estimate) drives the replan; the
+    freed endpoint is drained, its in-flight requests complete through
+    the ledger (zero dropped / double-completed), and only then is it
+    removed.  The migration never goes draw-negative."""
+    router, planner, apps, lookup, (hot0, cool0) = make_world(
+        hot_t=0.1, cool_t=0.2, load_rps=0.1, power_budget_w=50.0)
+    placement = planner.plan(apps)
+    assert placement.by_app["a0"] == "hot"       # cheap at the declared load
+    ctl = FleetController(router, planner, apps, placement=placement,
+                          tick_s=TICK_S)
+    # admit three requests onto hot0 (the soon-to-be-migrated endpoint)
+    decisions = []
+    for i in range(3):
+        d = router.route(req(f"fly{i}", 0))
+        assert d.accepted and d.endpoint.name == "hot0"
+        router.dispatch(d)
+        decisions.append(d)
+    draw_before = router.fleet_draw_w
+    assert draw_before > 0.0
+    # observe 20 rps of real traffic: utilization 2.0 slot-equivalents at
+    # ~200 W on hot — over the 50 W budget; cool holds it at ~10 W
+    for i in range(20):
+        ctl.on_complete(req(f"obs{i}", i * 5), "hot0", 0.1, tick=i * 5)
+    assert ctl.observed_load_rps()["m0"] == pytest.approx(20.0, rel=0.1)
+    folded = ctl.observed_apps()
+    assert folded[0].load_rps == pytest.approx(20.0, rel=0.1)
+
+    new = ctl.replan(tick=100)
+    assert new.feasible and new.by_app["a0"] == "cool"
+    assert hot0.draining                         # migration = drain, not cut
+    assert router.endpoint("hot0") is not None   # still live while draining
+    # no new dispatches land on the draining endpoint
+    d = router.route(req("after", 100))
+    assert d.accepted and d.endpoint.name == "cool0"
+    router.dispatch(d)
+    # in-flight work completes through the ledger: nothing dropped
+    for dec in decisions:
+        assert router.complete(dec, latency_s=0.1)
+        assert router.fleet_draw_w >= 0.0
+    assert router.drained("hot0")
+    ctl.step(101)                                # controller reaps the drain
+    assert router.endpoint("hot0") is None
+    removed = [e for e in ctl.events if e["event"] == "removed"]
+    assert [e["endpoint"] for e in removed] == ["hot0"]
+    # the survivor still serves and the books balance
+    assert router.complete(d, latency_s=0.2)
+    assert router.fleet_draw_w == 0.0
+
+
+def test_quarantined_endpoint_is_never_drained():
+    """Recovery owns a quarantined endpoint: migration must not drain it,
+    or the half-open probes would have nothing to restore."""
+    router, planner, apps, _, (hot0, _) = make_world()
+    ctl = FleetController(router, planner, apps,
+                          placement=planner.plan(apps), tick_s=TICK_S)
+    router.health["hot0"].quarantine("died")
+    ctl.replan(tick=5, failed="hot")
+    assert not hot0.draining
+    assert ctl.placement.by_app["a0"] == "cool"
+
+
+# ------------------------------------------------------------------ resize
+def test_elastic_resize_event_triggers_a_replan():
+    from repro.runtime.elastic import ResizeEvent, detect_resize
+    assert detect_resize(None, 4) is None        # first observation
+    assert detect_resize(4, 4) is None           # stable
+    ev = detect_resize(4, 2, tick=17)
+    assert ev == ResizeEvent(tick=17, n_before=4, n_after=2)
+    assert not ev.grew and detect_resize(2, 4, tick=18).grew
+
+    router, planner, apps, _, _ = make_world()
+    ctl = FleetController(router, planner, apps,
+                          placement=planner.plan(apps), tick_s=TICK_S)
+    out = ctl.on_resize(ev)
+    assert out.feasible
+    kinds = [e["event"] for e in ctl.events]
+    assert kinds == ["resize", "replan"]
+    assert ctl.events[0]["n_after"] == 2
+
+
+# ----------------------------------------------------- metrics observation
+def test_metrics_report_refusal_reasons_and_endpoint_percentiles():
+    """All endpoints quarantined => the refusal says so (not a generic
+    infeasibility), and completed requests feed per-endpoint p50/p95."""
+    router, planner, apps, _, _ = make_world()
+    loop = ControlLoop(
+        router, [req(f"r{i}", i) for i in range(8)],
+        injector=FaultInjector([
+            Fault(kind="kill", endpoint="hot0", at_tick=2, until_tick=6),
+            Fault(kind="latency", endpoint="cool0", at_tick=0, factor=2.0),
+        ]), tick_s=TICK_S, max_ticks=120)
+    out = loop.run()
+    assert out["completed"] == 8 and out["dropped"] == []
+    summary = router.metrics.summary()
+    assert summary["refusals"] == out["refusals"]
+    eps = summary["endpoints"]
+    assert set(eps) <= {"hot0", "cool0"} and "cool0" in eps
+    for name, s in eps.items():
+        assert s["completed"] >= 1
+        assert 0.0 <= s["latency_p50_s"] <= s["latency_p95_s"]
+    # per-arch observation is stamped on every request record
+    assert all(m.arch == "m0" for m in router.metrics.requests.values())
+
+
+def test_all_endpoints_quarantined_refuses_with_the_right_reason():
+    router, planner, apps, _, _ = make_world()
+    for h in router.health.values():
+        h.quarantine("chaos")
+    d = router.route(req("r0", 0))
+    assert not d.accepted and d.reason == "endpoint quarantined"
+    assert router.metrics.refusals["endpoint quarantined"] == 1
+
+
+def test_observed_apps_splits_load_across_apps_sharing_an_arch():
+    apps = [FleetApp(name="a", arch="m"), FleetApp(name="b", arch="m"),
+            FleetApp(name="c", arch="other", load_rps=7.0)]
+    out = observed_apps(apps, {"m": 10.0})
+    assert [a.load_rps for a in out] == pytest.approx([5.0, 5.0, 7.0])
+    assert [a.name for a in out] == ["a", "b", "c"]
+    assert observed_apps(apps, {})[2].load_rps == 7.0
+
+
+def test_power_spike_fault_shows_up_in_the_draw_trace():
+    router, planner, apps, _, _ = make_world()
+    spike = Fault(kind="power_spike", endpoint="hot0", at_tick=0,
+                  until_tick=5, factor=123.0)
+    loop = ControlLoop(router, [req("r0", 0)],
+                       injector=FaultInjector([spike]), tick_s=TICK_S)
+    out = loop.run()
+    assert out["completed"] == 1
+    assert out["fleet_draw_w_max"] >= 123.0
+    assert out["fleet_draw_w_min"] >= 0.0

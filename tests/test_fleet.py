@@ -225,6 +225,49 @@ def test_replan_reports_infeasible_when_survivors_cannot_hold_the_fleet():
                          if out.candidates.get(a)]
 
 
+def test_replan_under_live_traffic_uses_observed_loads():
+    """Satellite pin: the control loop replans with *observed* per-arch
+    load folded in (repro.fleet.observed_apps), not the declared
+    estimates — survivors stay pinned, the displaced app is re-placed on
+    the surviving backend under its real load."""
+    from repro.fleet import observed_apps
+    planner, apps, lookup = make_world(n_apps=3, load_rps=1.0, slots=8.0)
+    lookup.register_failure(serve_key("hot", apps[2].arch), "wrong result")
+    planner._cand_cache.clear()
+    placement = planner.plan(apps)
+    assert placement.feasible
+    assert placement.by_app["a2"] == "cool"
+    # live traffic doubled on a0/a1 and halved on a2 vs the estimates
+    live = observed_apps(apps, {"m0": 2.0, "m1": 2.0, "m2": 0.5})
+    assert [a.load_rps for a in live] == pytest.approx([2.0, 2.0, 0.5])
+    out = planner.replan(live, placement, "hot")
+    assert out.feasible
+    assert "hot" not in out.by_app.values()      # dead backend unused
+    assert out.by_app["a2"] == "cool"            # survivor: pinned
+    assert out.by_app["a0"] == out.by_app["a1"] == "cool"
+    # the objective reflects the observed loads, not the declared ones:
+    # (2 + 2 + 0.5) rps x 0.2 s on cool
+    assert out.objective == pytest.approx(0.9, rel=1e-3)
+
+
+def test_replan_violations_name_the_overflowing_backend():
+    """A placement that was feasible before the failure must come back
+    with explicit violations when the shrunken pool cannot host it —
+    never a silently-infeasible or silently-dropped app."""
+    planner, apps, _ = make_world(n_apps=2, load_rps=6.0, slots=1.0,
+                                  cool_t=0.15)
+    placement = planner.plan(apps)
+    assert placement.feasible                    # one app per backend fits
+    out = planner.replan(apps, placement, "hot")
+    assert not out.feasible
+    assert out.violations                        # explicit, not silent
+    # and the survivors-only assignment names the overflowing backend:
+    # 2 apps x 6 rps x 0.15 s = 1.8 slot-equivalents > cool's 1.0
+    forced = planner.evaluate(apps, (1, 1), usable=[False, True])
+    assert not forced.feasible
+    assert any("cool" in v and "slot" in v for v in forced.violations)
+
+
 # ---------------------------------------------------------------- baseline
 def test_round_robin_is_the_capacity_blind_baseline():
     planner, apps, _ = make_world(n_apps=4)

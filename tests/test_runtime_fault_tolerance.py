@@ -56,6 +56,38 @@ def test_watchdog_ewma_tracks_recent_steps():
     assert wd.ewma == pytest.approx(2.0)
 
 
+def test_watchdog_window_is_a_bounded_deque():
+    """Satellite pin: the window is a deque(maxlen=window) — recording
+    beyond the window evicts from the left in O(1), never grows, and the
+    bound holds under heavy sustained load."""
+    from collections import deque
+    wd = StragglerWatchdog(window=8)
+    assert isinstance(wd.times, deque) and wd.times.maxlen == 8
+    for i in range(1000):
+        wd.record(i, 1.0 + (i % 5) * 1e-3)
+    assert len(wd.times) == 8
+    assert list(wd.times) == [1.0 + (i % 5) * 1e-3 for i in range(992, 1000)]
+
+
+def test_watchdog_reset_gives_a_fresh_window():
+    """After an endpoint recovers, its health machine calls reset(): the
+    old (faulted) samples and EWMA must not poison the fresh regime."""
+    wd = StragglerWatchdog(window=10, ewma_alpha=0.5)
+    for i in range(10):
+        wd.record(i, 10.0)               # the faulted regime
+    assert wd.ewma is not None and len(wd.times) == 10
+    wd.reset()
+    assert len(wd.times) == 0 and wd.ewma is None
+    assert wd.times.maxlen == 10         # the bound survives the reset
+    # the fresh regime seeds cleanly: 1.0 is not an outlier now
+    assert not wd.record(100, 1.0)
+    assert wd.ewma == pytest.approx(1.0)
+    # flag history is intentionally kept (it is the incident log)
+    for i in range(101, 111):
+        wd.record(i, 1.0)
+    assert not wd.flagged
+
+
 def test_watchdog_steady_steps_never_flag():
     wd = StragglerWatchdog(window=20, threshold=3.0)
     flagged = [wd.record(i, 1.0 + 0.001 * (i % 3)) for i in range(100)]

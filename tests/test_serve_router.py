@@ -212,6 +212,103 @@ def test_double_complete_cannot_drive_accounting_negative():
     assert router.fleet_draw_w == 0.0
 
 
+def test_removed_endpoint_ledger_entries_stay_completable():
+    """Satellite pin (dangling-ledger fix): removing an endpoint with
+    requests in flight must keep their ledger entries completable — draw
+    and slots release on ``complete`` exactly as if it were live, never
+    orphaned — and the draw entry drops only once fully drained."""
+    cfg = get_config(ARCH).reduced()
+    lk = PlanLookup()
+    gpu, mc = make_endpoints(cfg)
+    warm(lk, gpu, mc)
+    router = Router([gpu, mc], lk, policy="modeled")
+    d1, d2 = router.route(req("r1")), None
+    router.dispatch(d1)
+    d2 = router.route(req("r2"))
+    router.dispatch(d2)
+    assert d1.endpoint.name == d2.endpoint.name == "gpu0"
+    draw_full = router.fleet_draw_w
+    assert draw_full == pytest.approx(d1.avg_watts + d2.avg_watts)
+    router.remove_endpoint("gpu0")
+    assert router.endpoint("gpu0") is None       # out of routing
+    assert router.route(req("r3")).endpoint.name == "mc0"
+    assert router.in_flight_of("gpu0") == 2      # ledger survives removal
+    assert router.fleet_draw_w == pytest.approx(draw_full)
+    assert router.complete(d1)                   # completable, not orphaned
+    assert router.fleet_draw_w == pytest.approx(d2.avg_watts)
+    assert not router.drained("gpu0")
+    assert router.complete(d2)
+    assert router.drained("gpu0")
+    assert router.fleet_draw_w == 0.0            # books fully closed
+    assert not router.complete(d1)               # idempotent after removal
+    # re-admission after a full drain is legal again
+    router.add_endpoint(Endpoint(name="gpu0", backend=GPU, arch=cfg.name,
+                                 n_slots=2, cache_len=64, cfg=cfg))
+    assert router.route(req("r4")).endpoint.name == "gpu0"
+
+
+def test_drain_stops_dispatch_but_in_flight_completes():
+    """Satellite pin: drain is the migration primitive — no new
+    dispatches, in-flight requests keep their slots, removal only after
+    ``drained`` reports the ledger empty."""
+    cfg = get_config(ARCH).reduced()
+    lk = PlanLookup()
+    gpu, mc = make_endpoints(cfg)
+    warm(lk, gpu, mc)
+    router = Router([gpu, mc], lk, policy="modeled")
+    d = router.route(req("r1"))
+    router.dispatch(d)
+    assert d.endpoint.name == "gpu0"
+    router.drain("gpu0")
+    assert router.route(req("r2")).endpoint.name == "mc0"
+    assert not router.drained("gpu0")
+    assert router.complete(d, latency_s=0.01)
+    assert router.drained("gpu0") and gpu.in_flight == 0
+    with pytest.raises(ValueError):
+        router.drain("nope")
+
+
+def test_quarantine_with_in_flight_requests_drains_cleanly():
+    """Quarantine mid-flight: no new dispatches, but the admitted request
+    still completes through the ledger and feeds the health machine."""
+    cfg = get_config(ARCH).reduced()
+    lk = PlanLookup()
+    gpu, mc = make_endpoints(cfg)
+    warm(lk, gpu, mc)
+    router = Router([gpu, mc], lk, policy="modeled")
+    d = router.route(req("r1"))
+    router.dispatch(d)
+    router.health["gpu0"].quarantine("operator")
+    assert router.route(req("r2")).endpoint.name == "mc0"
+    assert router.complete(d, latency_s=0.01)
+    assert router.fleet_draw_w == 0.0 and gpu.in_flight == 0
+
+
+def test_failure_reports_open_the_circuit_and_requests_shift():
+    """Router-level circuit breaking: consecutive ``fail`` reports
+    quarantine the endpoint; traffic shifts to the survivor and the
+    refusal reason is specific once nothing is left."""
+    from repro.serve import HealthConfig
+    cfg = get_config(ARCH).reduced()
+    lk = PlanLookup()
+    gpu, mc = make_endpoints(cfg)
+    warm(lk, gpu, mc)
+    router = Router([gpu, mc], lk, policy="modeled",
+                    health_cfg=HealthConfig(error_threshold=2))
+    for _ in range(2):
+        d = router.route(req("r"))
+        assert d.endpoint.name == "gpu0"
+        router.dispatch(d)
+        assert router.fail(d, reason="endpoint died")
+    assert router.health["gpu0"].state == "quarantined"
+    d = router.route(req("shift"))
+    assert d.accepted and d.endpoint.name == "mc0"
+    router.health["mc0"].quarantine("chaos")
+    refused = router.route(req("none"))
+    assert not refused.accepted
+    assert refused.reason == "endpoint quarantined"
+
+
 def test_incorrect_record_backend_is_never_dispatched_to():
     cfg = get_config(ARCH).reduced()
     lk = PlanLookup()
