@@ -15,9 +15,12 @@ revives it later.  The run reports:
   * whether any controller replan placed the app on a backend with a
     published failure verdict (**must not happen**).
 
-Emits ``BENCH_chaos.json`` (a CI artifact next to BENCH_fleet.json) and
-exits 1 on any dropped request, any double completion, a never-recovered
-circuit, or a replan onto a failure-verdict backend.
+Emits ``BENCH_chaos.json`` (a CI artifact next to BENCH_fleet.json) plus
+a full ``repro.obs`` trace of the run — ``chaos_events.jsonl`` (the
+post-mortem input for ``python -m repro.obs.report``) and
+``chaos_trace.json`` (Chrome trace-event JSON, loadable in Perfetto) —
+and exits 1 on any dropped request, any double completion, a
+never-recovered circuit, or a replan onto a failure-verdict backend.
 
     PYTHONPATH=src python benchmarks/chaos.py [--out BENCH_chaos.json]
 """
@@ -52,16 +55,28 @@ def build_world():
     from repro.power import PowerEnvelope
     from repro.serve import Endpoint, HealthConfig, Router
 
+    from repro.obs import get_tracer
+
     lookup = PlanLookup()
     hot_b = SyntheticBackend("hot", PowerEnvelope("hot", idle_w=100.0,
                                                   peak_w=200.0))
     cool_b = SyntheticBackend("cool", PowerEnvelope("cool", idle_w=5.0,
                                                     peak_w=10.0))
-    # per-decode-step rooflines: hot is 4x faster but ~20x the draw
-    for name, step_t in (("hot", 0.005), ("cool", 0.02)):
-        lookup.register(serve_key(name, "app"),
-                        {"flops": step_t * PEAK_FLOPS, "bytes": 0.0,
-                         "collective_bytes": 0.0})
+    # per-decode-step rooflines: hot is 4x faster but ~20x the draw.
+    # Registering the warm roofline is this synthetic world's stand-in for
+    # offline verification, so it carries the same plan/verify span the
+    # real planner emits — the post-mortem's per-backend table reads these.
+    for order, (name, step_t) in enumerate((("hot", 0.005),
+                                            ("cool", 0.02))):
+        with get_tracer().span("verify", cat="plan",
+                               track=f"backend:{name}", backend=name,
+                               method="roofline-register",
+                               order=order) as vspan:
+            lookup.register(serve_key(name, "app"),
+                            {"flops": step_t * PEAK_FLOPS, "bytes": 0.0,
+                             "collective_bytes": 0.0})
+            vspan.set(best_time_s=step_t, correct=True, compile_s=0.0,
+                      cache_hit=True)
     endpoints = [
         Endpoint(name="hot0", backend=hot_b, arch="app", n_slots=8),
         Endpoint(name="cool0", backend=cool_b, arch="app", n_slots=8),
@@ -82,34 +97,68 @@ def build_world():
     return router, planner, apps, lookup
 
 
+def run_scenario(requests: int = 120, kill_at: int = 20,
+                 revive_at: int = 60, tracer=None) -> dict:
+    """The kill -> quarantine -> drain -> probe -> recover scenario, end to
+    end, with every layer's spans landing on ``tracer`` (or nowhere when
+    None).  Reused by the determinism pin in tests/test_control.py: the
+    same arguments must yield a byte-identical JSONL trace."""
+    from repro.obs import NULL_TRACER, use_tracer
+    from repro.runtime.control import (ControlLoop, Fault, FaultInjector,
+                                       FleetController)
+    from repro.serve import Request
+
+    tr = tracer if tracer is not None else NULL_TRACER
+    with use_tracer(tr):
+        # pin the clock before the world exists so the pre-loop records
+        # (verify spans, the fleet plan, GA generations) are deterministic
+        tr.set_time(0.0)
+        router, planner, apps, lookup = build_world()
+        placement = planner.plan(apps)
+        controller = FleetController(router, planner, apps,
+                                     placement=placement, tick_s=TICK_S)
+        trace = [Request(rid=f"r{i:04d}", arch="app", prompt_len=8,
+                         max_gen=1, arrival_s=i * TICK_S)
+                 for i in range(requests)]
+        injector = FaultInjector([Fault(kind="kill", endpoint="hot0",
+                                        at_tick=kill_at,
+                                        until_tick=revive_at)])
+        loop = ControlLoop(router, trace, controller=controller,
+                           injector=injector, tick_s=TICK_S,
+                           max_ticks=50 * requests)
+        misses0 = lookup.stats.misses
+        summary = loop.run()
+        tr.clear_time()
+    return {"router": router, "controller": controller, "lookup": lookup,
+            "trace": trace, "placement": placement, "summary": summary,
+            "misses0": misses0}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_chaos.json")
+    ap.add_argument("--trace-out", default="chaos_trace.json",
+                    help="Chrome trace-event JSON (Perfetto-loadable); "
+                         "'' disables")
+    ap.add_argument("--events-out", default="chaos_events.jsonl",
+                    help="JSONL event log for python -m repro.obs.report; "
+                         "'' disables")
     ap.add_argument("--requests", type=int, default=120,
                     help="open-loop trace length (one request per tick)")
     ap.add_argument("--kill-at", type=int, default=20)
     ap.add_argument("--revive-at", type=int, default=60)
     args = ap.parse_args()
 
-    from repro.runtime.control import (ControlLoop, Fault, FaultInjector,
-                                       FleetController)
-    from repro.serve import Request
+    from repro import obs
     from repro.serve.health import HEALTHY, QUARANTINED
 
-    router, planner, apps, lookup = build_world()
-    placement = planner.plan(apps)
-    controller = FleetController(router, planner, apps,
-                                 placement=placement, tick_s=TICK_S)
-    trace = [Request(rid=f"r{i:04d}", arch="app", prompt_len=8, max_gen=1,
-                     arrival_s=i * TICK_S) for i in range(args.requests)]
-    injector = FaultInjector([Fault(kind="kill", endpoint="hot0",
-                                    at_tick=args.kill_at,
-                                    until_tick=args.revive_at)])
-    loop = ControlLoop(router, trace, controller=controller,
-                       injector=injector, tick_s=TICK_S,
-                       max_ticks=50 * args.requests)
-    misses0 = lookup.stats.misses
-    summary = loop.run()
+    tracer = obs.Tracer()
+    world = run_scenario(requests=args.requests, kill_at=args.kill_at,
+                         revive_at=args.revive_at, tracer=tracer)
+    router, controller, lookup = (world["router"], world["controller"],
+                                  world["lookup"])
+    trace, summary, misses0 = (world["trace"], world["summary"],
+                               world["misses0"])
 
     failures = []
     if summary["dropped"]:
@@ -184,6 +233,15 @@ def main():
         "endpoint_summary": router.metrics.endpoint_summary(),
         "failures": failures,
     }
+    if args.events_out:
+        obs.write_jsonl(tracer.records, args.events_out)
+        out["events_jsonl"] = args.events_out
+        print(f"wrote {args.events_out} "
+              f"(post-mortem: python -m repro.obs.report {args.events_out})")
+    if args.trace_out:
+        obs.write_chrome_trace(tracer.records, args.trace_out)
+        out["chrome_trace"] = args.trace_out
+        print(f"wrote {args.trace_out} (load in Perfetto / about:tracing)")
     Path(args.out).write_text(json.dumps(out, indent=1))
     print(f"chaos: {summary['completed']}/{args.requests} completed, "
           f"0 dropped expected (got {len(summary['dropped'])}), "

@@ -134,6 +134,8 @@ def run_ga(gene_length: int,
         if g not in pop or guard > 50 * cfg.population:
             pop.append(g)
 
+    from repro.obs import get_tracer
+
     history: List[dict] = []
     for gen in range(cfg.generations):
         evals, n_fresh = ev_population(pop)
@@ -151,6 +153,12 @@ def run_ga(gene_length: int,
             "n_pruned": sum(bool(e.info.get("static_pruned"))
                             for e in evals),
         })
+        row = history[-1]
+        get_tracer().event(
+            "generation", cat="ga", track="search", generation=gen,
+            best_time_s=row["best_time_s"],
+            mean_fitness=row["mean_fitness"], n_correct=row["n_correct"],
+            n_fresh=row["n_fresh"], n_pruned=row["n_pruned"])
 
         if gen == cfg.generations - 1:
             break

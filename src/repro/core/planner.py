@@ -35,6 +35,7 @@ from repro.backends import (BackendRegistry, SearchContext, SelectionPolicy,
 from repro.core import function_blocks
 from repro.core.ga import GAConfig
 from repro.core.measure import TimedRunner
+from repro.obs import get_tracer
 
 
 @dataclass
@@ -218,6 +219,8 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
     records: List[VerificationRecord] = []
     fb_pinned = False                   # residual rule state
     early = False
+    plan_span = get_tracer().span("offload", cat="plan", track="planner",
+                                  app=app.name, ref_time_s=ref_time)
 
     for order, (backend, method) in enumerate(backends.verification_order(),
                                               start=1):
@@ -229,51 +232,67 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
             fb_pinned = True
             ctx.fixed_choice = _pin_best_fb(records, ref_time)
 
-        res = backend.search(app, ctx, method=method)
-        rec = VerificationRecord(
-            order=order, destination=backend.name,
-            paper_analogue=backend.paper_analogue, method=method,
-            best_time_s=res.best_time_s,
-            improvement=ref_time / max(res.best_time_s, 1e-12)
-            if res.best_time_s < float("inf") else 0.0,
-            price=backend.price, n_measurements=res.n_measurements,
-            verify_elapsed_s=res.verify_elapsed_s,
-            met_target=res.best_correct and targets.met(
-                res.best_time_s, ref_time, backend.price),
-            correct=res.best_correct,
-            choice=dict(res.best_choice), note=res.note,
-            cache_stats=dict(getattr(res, "cache_stats", {}) or {}))
-        records.append(rec)
+        with get_tracer().span("verify", cat="plan",
+                               track=f"backend:{backend.name}",
+                               backend=backend.name, method=method,
+                               order=order) as vspan:
+            res = backend.search(app, ctx, method=method)
+            rec = VerificationRecord(
+                order=order, destination=backend.name,
+                paper_analogue=backend.paper_analogue, method=method,
+                best_time_s=res.best_time_s,
+                improvement=ref_time / max(res.best_time_s, 1e-12)
+                if res.best_time_s < float("inf") else 0.0,
+                price=backend.price, n_measurements=res.n_measurements,
+                verify_elapsed_s=res.verify_elapsed_s,
+                met_target=res.best_correct and targets.met(
+                    res.best_time_s, ref_time, backend.price),
+                correct=res.best_correct,
+                choice=dict(res.best_choice), note=res.note,
+                cache_stats=dict(getattr(res, "cache_stats", {}) or {}))
+            records.append(rec)
 
-        # mesh bridge: compile the winner for an actual mesh through the
-        # backend's hook and record the modeled (roofline) step time next to
-        # the host timing
-        if (cost_runner is not None and rec.correct
-                and rec.best_time_s < float("inf")):
-            mesh_ev = backend.mesh_verify(cost_runner,
-                                          app.build(dict(rec.choice)), inputs)
-            if mesh_ev is not None and mesh_ev.correct:
-                rec.mesh_time_s = mesh_ev.time_s
-                rec.mesh_info = dict(mesh_ev.info)
+            # mesh bridge: compile the winner for an actual mesh through
+            # the backend's hook and record the modeled (roofline) step
+            # time next to the host timing
+            if (cost_runner is not None and rec.correct
+                    and rec.best_time_s < float("inf")):
+                mesh_ev = backend.mesh_verify(
+                    cost_runner, app.build(dict(rec.choice)), inputs)
+                if mesh_ev is not None and mesh_ev.correct:
+                    rec.mesh_time_s = mesh_ev.time_s
+                    rec.mesh_info = dict(mesh_ev.info)
 
-        # energy charge (repro.power): every correct finite record gets the
-        # modeled joules/watts the power/edp policies and the
-        # power_budget_w constraint consume — from the mesh roofline when
-        # the bridge recorded one, envelope × host-time otherwise
-        if rec.correct and rec.best_time_s < float("inf"):
-            from repro.power import energy_for_record, envelope_for
-            e_rep = energy_for_record(rec, envelope_for(backend))
-            if e_rep is not None:
-                rec.energy_j = e_rep.energy_j
-                rec.avg_watts = e_rep.avg_watts
-                rec.energy_info = e_rep.to_dict()
+            # energy charge (repro.power): every correct finite record gets
+            # the modeled joules/watts the power/edp policies and the
+            # power_budget_w constraint consume — from the mesh roofline
+            # when the bridge recorded one, envelope × host-time otherwise
+            if rec.correct and rec.best_time_s < float("inf"):
+                from repro.power import energy_for_record, envelope_for
+                e_rep = energy_for_record(rec, envelope_for(backend))
+                if e_rep is not None:
+                    rec.energy_j = e_rep.energy_j
+                    rec.avg_watts = e_rep.avg_watts
+                    rec.energy_info = e_rep.to_dict()
 
-        # search/lookup split: publish this verification into the serve-time
-        # lookup (correct mesh-verified records warm it; incorrect ones are
-        # recorded failures the router statically refuses)
-        if publish is not None:
-            from repro.core.plan_lookup import publish_record
-            publish_record(publish, rec, backend, app.name)
+            # search/lookup split: publish this verification into the
+            # serve-time lookup (correct mesh-verified records warm it;
+            # incorrect ones are recorded failures the router statically
+            # refuses)
+            if publish is not None:
+                from repro.core.plan_lookup import publish_record
+                publish_record(publish, rec, backend, app.name)
+
+            stats = rec.cache_stats
+            vspan.set(best_time_s=rec.best_time_s, correct=rec.correct,
+                      compile_s=float(stats.get("compile_s",
+                                                rec.verify_elapsed_s)),
+                      cache_hit=bool(stats.get("reused")
+                                     or stats.get("hits")
+                                     or stats.get("disk_hits")),
+                      energy_j=rec.energy_j,
+                      n_measurements=rec.n_measurements,
+                      met_target=rec.met_target)
 
         if rec.met_target:
             early = True
@@ -297,6 +316,11 @@ def plan_offload(app, targets: UserTarget, *, seed: int = 0,
                                      max_slowdown=max_slowdown))
     else:
         selected = unwrap(pol.select(cands))
+    plan_span.set(policy=pol.name, early_stopped=early,
+                  n_verifications=len(records),
+                  selected=selected.destination
+                  if selected is not None else None)
+    plan_span.finish()
     return PlanReport(app=app.name, ref_time_s=ref_time, records=records,
                       selected=selected, early_stopped=early,
                       policy=pol.name)

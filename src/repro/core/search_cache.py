@@ -358,6 +358,7 @@ def make_cached_batch_evaluator(
 
     from repro.core import cost_model
     from repro.core.ga import Evaluation
+    from repro.obs import get_tracer
 
     if cache is None:
         cache = SearchCache()
@@ -371,6 +372,9 @@ def make_cached_batch_evaluator(
     lint_memo: Dict[Tuple[int, ...], list] = {}
 
     def evaluate_batch(generation: List[Tuple[int, ...]]) -> List[Any]:
+        gen_span = get_tracer().span("evaluate_batch", cat="search",
+                                     track="search",
+                                     candidates=len(generation))
         plans = [from_genes(g) for g in generation]
         keys = [(key_prefix, p.structural_key()) for p in plans]
         hashes = [hash_key(k) for k in keys]
@@ -406,15 +410,19 @@ def make_cached_batch_evaluator(
 
         def build(item):
             key, plan = item
-            try:
-                t0 = time.perf_counter()
-                compiled = lower_plan(plan).compile()
-                dt = time.perf_counter() - t0
-                analysis = analyze_compiled(compiled)
-                cache.put_compiled(key, compiled)
-                return cache.put(key, analysis, dt)
-            except Exception as e:     # compile error == conversion fails
-                return cache.put_failure(key, repr(e)[:500])
+            with get_tracer().span("compile", cat="search",
+                                   track="search") as csp:
+                try:
+                    t0 = time.perf_counter()
+                    compiled = lower_plan(plan).compile()
+                    dt = time.perf_counter() - t0
+                    analysis = analyze_compiled(compiled)
+                    cache.put_compiled(key, compiled)
+                    csp.set(ok=True, compile_s=dt)
+                    return cache.put(key, analysis, dt)
+                except Exception as e:  # compile error == conversion fails
+                    csp.set(ok=False)
+                    return cache.put_failure(key, repr(e)[:500])
 
         if todo:
             n = max(1, min(workers, len(todo)))
@@ -450,6 +458,10 @@ def make_cached_batch_evaluator(
                 payload["analysis"],
                 payload.get("compile_s", 0.0) if fresh else 0.0,
                 bubble_fraction=bubble, cache_hit=not fresh))
+        gen_span.set(n_pruned=len(pruned), compiles=len(todo),
+                     n_fresh=len(todo),
+                     hits=len(generation) - len(pruned) - len(todo))
+        gen_span.finish()
         return out
 
     def evaluate(genes):

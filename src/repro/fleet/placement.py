@@ -40,6 +40,7 @@ from repro.backends import get_policy
 from repro.core.candidates import Candidate
 from repro.core.ga import Evaluation, GAConfig, run_ga
 from repro.core.plan_lookup import PlanLookup, serve_key
+from repro.obs import get_tracer
 from repro.power import fleet_draw_w
 
 
@@ -271,31 +272,38 @@ class FleetPlanner:
         roofline arithmetic."""
         if not apps:
             raise ValueError("nothing to place")
-        seed = self.greedy(apps, usable=usable)
-        import dataclasses
-        cfg = self.ga_cfg or GAConfig.for_gene_length(max(len(apps), 2))
-        # the genome is always one pool index per app — the planner owns
-        # the cardinalities whatever the caller's cfg says
-        cfg = dataclasses.replace(
-            cfg, cardinalities=[len(self.pool)] * len(apps))
+        with get_tracer().span("plan", cat="fleet", track="fleet",
+                               n_apps=len(apps),
+                               n_pool=len(self.pool)) as span:
+            seed = self.greedy(apps, usable=usable)
+            import dataclasses
+            cfg = self.ga_cfg or GAConfig.for_gene_length(max(len(apps), 2))
+            # the genome is always one pool index per app — the planner
+            # owns the cardinalities whatever the caller's cfg says
+            cfg = dataclasses.replace(
+                cfg, cardinalities=[len(self.pool)] * len(apps))
 
-        def fitness(genes: Tuple[int, ...]) -> Evaluation:
-            p = self.evaluate(apps, genes, usable=usable)
-            if not p.feasible:
-                return Evaluation(time_s=cfg.penalty_s, correct=False,
-                                  info={"violations": p.violations})
-            return Evaluation(time_s=max(p.objective, 1e-12), correct=True,
-                              info={"placement": p})
+            def fitness(genes: Tuple[int, ...]) -> Evaluation:
+                p = self.evaluate(apps, genes, usable=usable)
+                if not p.feasible:
+                    return Evaluation(time_s=cfg.penalty_s, correct=False,
+                                      info={"violations": p.violations})
+                return Evaluation(time_s=max(p.objective, 1e-12),
+                                  correct=True, info={"placement": p})
 
-        res = run_ga(len(apps), fitness, cfg,
-                     seed_population=[seed] if seed is not None else None)
-        best = self.evaluate(apps, res.best_genes, usable=usable)
-        best.info["ga"] = {"n_measurements": res.n_measurements,
-                           "generations": len(res.history)}
-        if seed is not None:
-            greedy_p = self.evaluate(apps, seed, usable=usable)
-            best.info["greedy"] = {"assignment": seed,
-                                   "objective": greedy_p.objective}
+            res = run_ga(len(apps), fitness, cfg,
+                         seed_population=[seed] if seed is not None
+                         else None)
+            best = self.evaluate(apps, res.best_genes, usable=usable)
+            best.info["ga"] = {"n_measurements": res.n_measurements,
+                               "generations": len(res.history)}
+            if seed is not None:
+                greedy_p = self.evaluate(apps, seed, usable=usable)
+                best.info["greedy"] = {"assignment": seed,
+                                       "objective": greedy_p.objective}
+            span.set(feasible=best.feasible, objective=best.objective,
+                     fleet_draw_w=best.fleet_draw_w,
+                     by_app=dict(best.by_app))
         return best
 
     # ------------------------------------------------------------- replan
@@ -310,18 +318,26 @@ class FleetPlanner:
         idx = {b.name: j for j, b in enumerate(self.pool)}
         if failed_backend not in idx:
             raise ValueError(f"unknown backend {failed_backend!r}")
-        usable = [b.name != failed_backend for b in self.pool]
-        pinned = {i: placement.assignment[i] for i, app in enumerate(apps)
-                  if placement.by_app.get(app.name) != failed_backend}
-        seed = self.greedy(apps, usable=usable, pinned=pinned)
-        if seed is not None:
-            out = self.evaluate(apps, seed, usable=usable)
-            if out.feasible:
-                out.info["replan"] = {"mode": "pinned-greedy",
-                                      "failed": failed_backend}
-                return out
-        out = self.plan(apps, usable=usable)
-        out.info["replan"] = {"mode": "full", "failed": failed_backend}
+        with get_tracer().span("replan", cat="fleet", track="fleet",
+                               failed=failed_backend,
+                               n_apps=len(apps)) as span:
+            usable = [b.name != failed_backend for b in self.pool]
+            pinned = {i: placement.assignment[i]
+                      for i, app in enumerate(apps)
+                      if placement.by_app.get(app.name) != failed_backend}
+            seed = self.greedy(apps, usable=usable, pinned=pinned)
+            if seed is not None:
+                out = self.evaluate(apps, seed, usable=usable)
+                if out.feasible:
+                    out.info["replan"] = {"mode": "pinned-greedy",
+                                          "failed": failed_backend}
+                    span.set(mode="pinned-greedy", feasible=True,
+                             by_app=dict(out.by_app))
+                    return out
+            out = self.plan(apps, usable=usable)
+            out.info["replan"] = {"mode": "full", "failed": failed_backend}
+            span.set(mode="full", feasible=out.feasible,
+                     by_app=dict(out.by_app))
         return out
 
 

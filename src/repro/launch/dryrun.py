@@ -112,6 +112,24 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
              plan_name: str = "auto", out_dir: Path = OUT_DIR,
              overrides: dict = None, policy: str = "host-time",
              use_cache: bool = True) -> dict:
+    """One dry-run cell, wrapped in a ``dryrun/cell`` span (repro.obs)."""
+    from repro.obs import get_tracer
+    with get_tracer().span("cell", cat="dryrun", track="dryrun",
+                           arch=arch, shape=shape_name, mesh=mesh_kind,
+                           plan=plan_name) as span:
+        result = _run_cell(arch, shape_name, mesh_kind, plan_name, out_dir,
+                           overrides, policy, use_cache)
+        span.set(skipped="skip" in result, pruned="lint" in result
+                 and "error" in result, cache_hit=result.get("cache_hit"),
+                 compile_s=result.get("compile_s"),
+                 verify_s=result.get("verify_s"))
+    return result
+
+
+def _run_cell(arch: str, shape_name: str, mesh_kind: str,
+              plan_name: str = "auto", out_dir: Path = OUT_DIR,
+              overrides: dict = None, policy: str = "host-time",
+              use_cache: bool = True) -> dict:
     import jax
     from repro.configs import get_config, get_shape, cell_runnable
     from repro.core import cost_model
@@ -287,6 +305,12 @@ def main():
                          "(<out>/search_cache.json) and always recompile")
     ap.add_argument("--timeout", type=int, default=3000)
     ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a repro.obs trace of this invocation's "
+                         "cells; writes JSONL events if PATH ends in "
+                         ".jsonl, else a Perfetto-loadable Chrome trace "
+                         "(single-cell mode only — the --all driver runs "
+                         "each cell in a subprocess)")
     args = ap.parse_args()
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -412,16 +436,26 @@ def main():
     # single cell (in-process)
     assert args.arch and args.shape
     path = cell_path(out_dir, args.arch, args.shape, args.mesh, plan_tag)
+    from repro import obs
+    tracer = obs.Tracer() if args.trace else obs.NULL_TRACER
     try:
-        res = run_cell(args.arch, args.shape, args.mesh, args.plan, out_dir,
-                       all_overrides or None, policy=args.policy,
-                       use_cache=not args.no_search_cache)
+        with obs.use_tracer(tracer):
+            res = run_cell(args.arch, args.shape, args.mesh, args.plan,
+                           out_dir, all_overrides or None,
+                           policy=args.policy,
+                           use_cache=not args.no_search_cache)
     except Exception:
         res = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
                "error": traceback.format_exc()[-6000:]}
         path.write_text(json.dumps(res, indent=1))
         print(json.dumps(res, indent=1))
         sys.exit(1)
+    finally:
+        if args.trace:
+            if args.trace.endswith(".jsonl"):
+                obs.write_jsonl(tracer.records, args.trace)
+            else:
+                obs.write_chrome_trace(tracer.records, args.trace)
     path.write_text(json.dumps(res, indent=1))
     print(json.dumps({k: v for k, v in res.items()
                       if k in ("arch", "shape", "mesh", "compile_s",

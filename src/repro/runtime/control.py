@@ -36,6 +36,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.fleet.placement import (FleetApp, FleetPlanner, Placement,
                                    observed_apps)
+from repro.obs import get_tracer
 from repro.serve.batching import DEFAULT_TICK_S
 from repro.serve.health import DEGRADED, HEALTHY, QUARANTINED
 from repro.serve.request import Request
@@ -201,25 +202,32 @@ class FleetController:
         backend that just dropped: survivors stay pinned
         (:meth:`FleetPlanner.replan`); otherwise a full plan runs over the
         usable pool.  Always followed by drain-based migration."""
-        apps = self.observed_apps()
-        # verdicts may have changed since the last plan (a wrong result
-        # published a failure): the planner's memo must not outlive them
-        self.planner._cand_cache.clear()
-        pool_names = {pb.name for pb in self.planner.pool}
-        if failed is not None and failed in pool_names \
-                and self.placement is not None:
-            placement = self.planner.replan(apps, self.placement, failed)
-        else:
-            placement = self.planner.plan(apps, usable=self._usable_mask())
-        self.replans += 1
-        self.events.append({"tick": tick, "event": "replan",
-                            "failed": failed,
-                            "feasible": placement.feasible,
-                            "by_app": dict(placement.by_app),
-                            "fleet_draw_w": placement.fleet_draw_w})
-        self._migrate(tick, placement)
-        self.placement = placement
-        self._prev_used = set(placement.by_app.values())
+        with get_tracer().span("replan", cat="control", track="control",
+                               tick=tick, failed=failed) as span:
+            apps = self.observed_apps()
+            # verdicts may have changed since the last plan (a wrong result
+            # published a failure): the planner's memo must not outlive them
+            self.planner._cand_cache.clear()
+            pool_names = {pb.name for pb in self.planner.pool}
+            if failed is not None and failed in pool_names \
+                    and self.placement is not None:
+                placement = self.planner.replan(apps, self.placement,
+                                                failed)
+            else:
+                placement = self.planner.plan(apps,
+                                              usable=self._usable_mask())
+            self.replans += 1
+            self.events.append({"tick": tick, "event": "replan",
+                                "failed": failed,
+                                "feasible": placement.feasible,
+                                "by_app": dict(placement.by_app),
+                                "fleet_draw_w": placement.fleet_draw_w})
+            self._migrate(tick, placement)
+            self.placement = placement
+            self._prev_used = set(placement.by_app.values())
+            span.set(feasible=placement.feasible,
+                     by_app=dict(placement.by_app),
+                     fleet_draw_w=placement.fleet_draw_w)
         return placement
 
     def _migrate(self, tick: int, placement: Placement):
@@ -237,10 +245,13 @@ class FleetController:
             if h is not None and h.state not in (HEALTHY, DEGRADED):
                 continue
             self.router.drain(ep.name)
+            in_flight = self.router.in_flight_of(ep.name)
             self.events.append({"tick": tick, "event": "drain",
                                 "endpoint": ep.name,
-                                "in_flight": self.router.in_flight_of(
-                                    ep.name)})
+                                "in_flight": in_flight})
+            get_tracer().event("drain", cat="control", track="control",
+                               tick=tick, endpoint=ep.name,
+                               in_flight=in_flight)
 
     # ---------------------------------------------------------------- step
     def step(self, tick: int):
@@ -272,6 +283,9 @@ class FleetController:
                 self.router.remove_endpoint(ep.name)
                 self.events.append({"tick": tick, "event": "removed",
                                     "endpoint": ep.name})
+                get_tracer().event("migrated", cat="control",
+                                   track="control", tick=tick,
+                                   endpoint=ep.name)
 
     # -------------------------------------------------------------- resize
     def on_resize(self, event) -> Placement:
@@ -344,13 +358,22 @@ class ControlLoop:
             self.queue.appendleft(req)      # retries route before new work
 
     def _fail(self, rid: str, tick: int, reason: str):
-        decision, _, _, req = self.inflight.pop(rid)
+        decision, t0, _, req = self.inflight.pop(rid)
         self.failed += 1
+        get_tracer().complete_span(
+            "request", t0 * self.tick_s, tick * self.tick_s, cat="serve",
+            track=f"endpoint:{decision.endpoint.name}", rid=rid, ok=False,
+            reason=reason, retries=req.retries)
         self.router.fail(decision, reason=reason, now_s=tick * self.tick_s)
         self._requeue(req)
 
     # ---------------------------------------------------------------- tick
     def _tick(self, tick: int):
+        # pin the tracer to the virtual clock: every record this tick
+        # emits — health transitions, replans, GA generations inside a
+        # replan — is stamped with the tick time, so a replayed scenario
+        # produces a byte-identical event log
+        get_tracer().set_time(tick * self.tick_s)
         # 1. arrivals
         while self._pending and \
                 self._pending[0].arrival_s <= tick * self.tick_s + 1e-12:
@@ -382,6 +405,10 @@ class ControlLoop:
                 self.double_completed += 1
                 continue
             self.completed_ok += 1
+            get_tracer().complete_span(
+                "request", t0 * self.tick_s, tick * self.tick_s,
+                cat="serve", track=f"endpoint:{name}", rid=rid, ok=True,
+                latency_s=latency_s, energy_j=decision.energy_j)
             if self.controller is not None:
                 self.controller.on_complete(req, name, latency_s, tick)
         # 4. routing
@@ -411,6 +438,16 @@ class ControlLoop:
         else:
             for h in self.router.health.values():
                 h.on_tick(tick)
+        # one instant per tick with the cumulative counters the post-mortem
+        # trends on (cache hit-rate, joules/request, fleet draw)
+        stats = self.router.lookup.stats
+        get_tracer().event(
+            "tick", cat="loop", track="loop", tick=tick,
+            completed=self.completed_ok, failed=self.failed,
+            queued=len(self.queue), inflight=len(self.inflight),
+            draw_w=self.draw_trace[-1],
+            energy_j=self.router.metrics.total_energy_j,
+            lookups=stats.lookups, lookup_hits=stats.hits)
 
     # ----------------------------------------------------------------- run
     def run(self) -> dict:

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import get_tracer
 from repro.serve.metrics import ServeMetrics
 from repro.serve.request import Request
 
@@ -238,7 +239,15 @@ class ContinuousBatcher:
                 self.tick_s, len(live_before) / self.n_slots)
             self.metrics.charge_tick(joules, live_before)
         else:
+            joules = 0.0
             self.metrics.charge_tick(0.0, live_before)
+        # one complete-span per tick on the virtual clock (no-op unless a
+        # tracer is enabled): the engine's swim-lane in a Perfetto trace
+        get_tracer().complete_span(
+            "tick", now, t_end, cat="engine",
+            track=f"engine:{self.cfg.name}", tick=self._ticks - 1,
+            live=len(live_before), queued=len(self._queue),
+            joules=joules)
         return bool(self._active.any() or self._queue or self._pending)
 
     # ---------------------------------------------------------------- run

@@ -36,6 +36,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from repro.obs import get_tracer
 from repro.runtime.fault_tolerance import StragglerWatchdog
 
 HEALTHY = "healthy"
@@ -82,7 +83,8 @@ class EndpointHealth:
     ``observe_success`` on each completed request, ``observe_error`` on
     each failure report; a controller advances the circuit timers with
     ``on_tick``.  ``transitions`` records every state change (tick, from,
-    to, reason) so chaos scenarios are assertable.
+    to, reason, and the triggering ``observed`` measurement) so chaos
+    scenarios are assertable and post-mortems can explain each firing.
     """
 
     def __init__(self, name: str = "", cfg: Optional[HealthConfig] = None):
@@ -104,11 +106,20 @@ class EndpointHealth:
         self._probe_successes = 0
 
     # ----------------------------------------------------------- plumbing
-    def _to(self, state: str, reason: str):
+    def _to(self, state: str, reason: str,
+            observed: Optional[Dict] = None):
+        """Record a state change.  ``observed`` carries the triggering
+        measurement (latency/ewma values, error counts, backoff length) so
+        a post-mortem can show *why* the transition fired, not just
+        from->to."""
         if state == self.state:
             return
-        self.transitions.append({"tick": self._tick, "from": self.state,
-                                 "to": state, "reason": reason})
+        entry = {"tick": self._tick, "from": self.state, "to": state,
+                 "reason": reason, "observed": dict(observed or {})}
+        self.transitions.append(entry)
+        get_tracer().event("transition", cat="health",
+                           track=f"endpoint:{self.name}", **entry,
+                           endpoint=self.name)
         self.state = state
 
     @property
@@ -139,7 +150,8 @@ class EndpointHealth:
             self._probes_in_flight = 0
             self._probe_successes = 0
             self._to(PROBING, f"backoff elapsed after "
-                              f"{int(self._backoff)} ticks: half-open")
+                              f"{int(self._backoff)} ticks: half-open",
+                     observed={"backoff_ticks": int(self._backoff)})
 
     # ------------------------------------------------------- observations
     def on_probe_dispatch(self):
@@ -158,17 +170,20 @@ class EndpointHealth:
         ewma = self.watchdog.ewma
         if ewma is None or self.baseline_s <= 0.0:
             return
+        observed = {"latency_s": float(latency_s), "ewma_s": float(ewma),
+                    "baseline_s": float(self.baseline_s)}
         if self.state == HEALTHY and \
                 (flagged or ewma > self.cfg.degrade_factor * self.baseline_s):
             self._to(DEGRADED,
                      f"latency ewma {ewma:.4g}s > "
                      f"{self.cfg.degrade_factor:g}x baseline "
-                     f"{self.baseline_s:.4g}s")
+                     f"{self.baseline_s:.4g}s", observed=observed)
         elif self.state == DEGRADED and \
                 ewma <= self.cfg.recover_factor * self.baseline_s:
             self._to(HEALTHY,
                      f"latency ewma {ewma:.4g}s back within "
-                     f"{self.cfg.recover_factor:g}x baseline")
+                     f"{self.cfg.recover_factor:g}x baseline",
+                     observed=observed)
 
     def observe_success(self, probe: bool = False):
         """A request completed correctly on this endpoint."""
@@ -181,8 +196,10 @@ class EndpointHealth:
                 self.recoveries += 1
                 self._backoff = float(self.cfg.backoff_ticks)
                 self._reopen_at = None
+                probes = self._probe_successes
                 self.watchdog.reset()         # fresh window post-recovery
-                self._to(HEALTHY, "recovered: half-open probe succeeded")
+                self._to(HEALTHY, "recovered: half-open probe succeeded",
+                         observed={"probe_successes": probes})
 
     def observe_error(self, reason: str = "", probe: bool = False):
         """An explicit failure report (died, wrong result, timeout...)."""
@@ -190,22 +207,28 @@ class EndpointHealth:
         self.consecutive_errors += 1
         if probe:
             self._probes_in_flight = max(self._probes_in_flight - 1, 0)
+        observed = {"consecutive_errors": self.consecutive_errors,
+                    "errors": self.errors,
+                    "error": reason or "error"}
         if self.state == PROBING:
             self._quarantine(f"probe failed: {reason or 'error'}",
-                             escalate=True)
+                             escalate=True, observed=observed)
         elif self.state != QUARANTINED and \
                 self.consecutive_errors >= self.cfg.error_threshold:
             self._quarantine(reason or
                              f"{self.consecutive_errors} consecutive "
-                             f"errors", escalate=False)
+                             f"errors", escalate=False, observed=observed)
 
     # ------------------------------------------------------------ circuit
-    def _quarantine(self, reason: str, escalate: bool):
+    def _quarantine(self, reason: str, escalate: bool,
+                    observed: Optional[Dict] = None):
         if escalate:
             self._backoff = min(self._backoff * self.cfg.backoff_mult,
                                 float(self.cfg.max_backoff_ticks))
         self._reopen_at = self._tick + int(self._backoff)
-        self._to(QUARANTINED, reason)
+        obs = dict(observed or {})
+        obs["backoff_ticks"] = int(self._backoff)
+        self._to(QUARANTINED, reason, observed=obs)
 
     def quarantine(self, reason: str = "operator request"):
         """Open the circuit explicitly (operator / controller action)."""

@@ -18,17 +18,26 @@ test.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 
 def percentile(values: List[float], p: float) -> Optional[float]:
-    """Nearest-rank percentile (p in [0,100]); None on empty input."""
+    """Nearest-rank percentile (p in [0,100]); None on empty input.
+
+    Uses the ceil-based nearest-rank definition ``k = ceil(p/100 * n)``:
+    ``int(round(...))`` rounds half-to-even (banker's rounding), which
+    picked the *lower* element on exact .5 ranks for half the input sizes
+    — a nondeterministic-looking bias pinned away by
+    tests/test_serve_metrics.py."""
     if not values:
         return None
     xs = sorted(values)
-    k = max(0, min(len(xs) - 1, int(round(p / 100.0 * (len(xs) - 1)))))
-    return xs[k]
+    if p <= 0:
+        return xs[0]
+    k = math.ceil(p / 100.0 * len(xs))
+    return xs[min(max(k, 1), len(xs)) - 1]
 
 
 @dataclass

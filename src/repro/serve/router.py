@@ -28,8 +28,9 @@ from typing import Dict, List, Optional, Tuple
 from repro.backends import SelectionPolicy, get_policy
 from repro.core.candidates import Candidate
 from repro.core.plan_lookup import PlanLookup, serve_key
-from repro.serve.health import (DEGRADED, PROBING, EndpointHealth,
-                                HealthConfig)
+from repro.obs import get_tracer
+from repro.serve.health import (DEGRADED, PROBING, QUARANTINED,
+                                EndpointHealth, HealthConfig)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.request import Request
 
@@ -240,11 +241,13 @@ class Router:
         return self.complete(decision, ok=False, error=reason, now_s=now_s)
 
     # ----------------------------------------------------------- scoring
-    def _score_endpoint(self, ep: Endpoint,
-                        req: Request) -> Optional[Candidate]:
-        """Warm-path score of one endpoint for one request, or None when
-        the endpoint cannot serve it (cold lookup, recorded failure, or a
-        static lint error).  Pure arithmetic — no jax."""
+    def _score_endpoint(self, ep: Endpoint, req: Request
+                        ) -> Tuple[Optional[Candidate], str]:
+        """Warm-path score of one endpoint for one request: ``(candidate,
+        verdict)``.  The candidate is None — and the verdict names why —
+        when the endpoint cannot serve it: ``lint-pruned`` (static lint
+        error), ``cold-lookup`` (nothing published), ``failure-verdict``
+        (a recorded verification failure).  Pure arithmetic — no jax."""
         from repro.analysis import lint_plan
         if ep.plan is not None or ep.cfg is not None:
             findings = lint_plan(
@@ -255,10 +258,11 @@ class Router:
                        "max_gen": req.max_gen})
             if any(f.severity == "error" for f in findings):
                 self.lookup.stats.static_pruned += 1
-                return None
+                return None, "lint-pruned"
         payload = self.lookup.lookup(ep.lookup_key())
         if not self.lookup.usable(payload):
-            return None             # cold or a recorded verification failure
+            return None, ("cold-lookup" if payload is None
+                          else "failure-verdict")
         # the warm analysis describes one decode step; the request costs
         # max_gen steps plus a prefill charged as prompt work at step rate
         return Candidate.from_analysis(
@@ -267,7 +271,7 @@ class Router:
             scale=req.max_gen + req.prompt_len / 8.0,
             plan_key=ep.plan.structural_key() if ep.plan is not None
             else None,
-            ref=ep)
+            ref=ep), "scored"
 
     # ----------------------------------------------------------- routing
     def route(self, req: Request) -> RoutingDecision:
@@ -278,17 +282,41 @@ class Router:
         outright; a probing endpoint is considered only while its
         half-open probe quota has room; a degraded endpoint stays rankable
         but its candidate is penalized by ``HealthConfig.degraded_penalty``
-        — traffic shifts away gradually instead of falling off a cliff."""
+        — traffic shifts away gradually instead of falling off a cliff.
+
+        When a tracer is enabled, each decision records one ``serve/route``
+        span carrying a per-endpoint *explain* record — the selection
+        rationale as data (lint-pruned / cold-lookup / quarantined /
+        draining / scored-with-time)."""
+        with get_tracer().span("route", cat="serve", track="router",
+                               rid=req.rid) as span:
+            decision, explain = self._route(req)
+            span.set(reason=decision.reason,
+                     endpoint=decision.endpoint.name
+                     if decision.endpoint is not None else None,
+                     considered=decision.considered,
+                     service_time_s=decision.service_time_s,
+                     explain=explain)
+        return decision
+
+    def _route(self, req: Request
+               ) -> Tuple[RoutingDecision, List[Dict]]:
         self.metrics.on_submit(req.rid, req.arrival_s, arch=req.arch)
         cands = []
+        explain: List[Dict] = []
         unavailable = 0
         for ep in self.endpoints:
             health = self.health.get(ep.name)
             if ep.draining or (health is not None and not health.available):
                 unavailable += 1
+                verdict = "draining" if ep.draining else \
+                    ("quarantined" if health.state == QUARANTINED
+                     else "probe-quota")
+                explain.append({"endpoint": ep.name, "verdict": verdict})
                 continue
-            cand = self._score_endpoint(ep, req)
+            cand, verdict = self._score_endpoint(ep, req)
             if cand is None:
+                explain.append({"endpoint": ep.name, "verdict": verdict})
                 continue
             if health is not None and health.state == DEGRADED:
                 pen = health.penalty
@@ -298,39 +326,57 @@ class Router:
                 if cand.energy_j is not None:
                     cand.energy_j *= pen
                 cand.info["health"] = DEGRADED
+                verdict = "scored-degraded"
+            explain.append({"endpoint": ep.name, "verdict": verdict,
+                            "time_s": cand.best_time_s,
+                            "watts": cand.avg_watts})
             cands.append(cand)
         if not cands:
             reason = "endpoint quarantined" \
                 if unavailable == len(self.endpoints) and unavailable > 0 \
                 else "no feasible endpoint"
             self.metrics.on_reject(req.rid, reason)
-            return RoutingDecision(req.rid, None, reason=reason)
+            return RoutingDecision(req.rid, None, reason=reason), explain
         headroom = None
         if self.power_budget_w is not None:
             headroom = self.power_budget_w - self.fleet_draw_w
         ranked = self.policy.rank(cands, power_budget_w=headroom)
+        ranked_eps = {c.ref.name for c in ranked}
+        for ex in explain:
+            if ex["verdict"].startswith("scored") \
+                    and ex["endpoint"] not in ranked_eps:
+                ex["verdict"] = "over-budget"
         if not ranked:
             self.metrics.on_reject(req.rid, "power budget saturated")
             return RoutingDecision(req.rid, None,
                                    reason="power budget saturated",
-                                   considered=len(cands))
+                                   considered=len(cands)), explain
         if req.deadline_s is not None:
+            slow = [c for c in ranked if c.best_time_s > req.deadline_s]
+            slow_eps = {c.ref.name for c in slow}
+            for ex in explain:
+                if ex["endpoint"] in slow_eps \
+                        and ex["verdict"].startswith("scored"):
+                    ex["verdict"] = "slo-infeasible"
             ranked = [c for c in ranked if c.best_time_s <= req.deadline_s]
             if not ranked:
                 self.metrics.on_reject(req.rid, "SLO infeasible")
                 return RoutingDecision(req.rid, None,
                                        reason="SLO infeasible",
-                                       considered=len(cands))
+                                       considered=len(cands)), explain
         for cand in ranked:
             if cand.ref.free_slots > 0:
+                for ex in explain:
+                    if ex["endpoint"] == cand.ref.name:
+                        ex["verdict"] = "chosen"
                 return RoutingDecision(
                     req.rid, cand.ref, reason="ok",
                     service_time_s=cand.best_time_s,
                     energy_j=cand.energy_j, avg_watts=cand.avg_watts,
-                    considered=len(cands))
+                    considered=len(cands)), explain
         self.metrics.on_reject(req.rid, "all slots busy")
         return RoutingDecision(req.rid, None, reason="all slots busy",
-                               considered=len(cands))
+                               considered=len(cands)), explain
 
 
 class _NullPlanType:

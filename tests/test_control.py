@@ -199,6 +199,41 @@ def test_chaos_replay_is_deterministic():
         assert out_a[key] == out_b[key], key
 
 
+def test_chaos_replay_trace_is_byte_identical():
+    """The replay pin, extended to observability: tracing the identical
+    scenario twice must serialize to byte-identical JSONL — every span and
+    event rides the loop's virtual tick clock (Tracer.set_time), and ids
+    are sequential, so nothing wall-clock-shaped can leak in."""
+    from repro.obs import Tracer, jsonl_line, use_tracer
+
+    def run_once() -> str:
+        tr = Tracer()
+        with use_tracer(tr):
+            # pin the clock before the world is built so the pre-loop
+            # records (fleet plan span, GA generation events) are pinned too
+            tr.set_time(0.0)
+            router, planner, apps, _, _ = make_world()
+            ctl = FleetController(router, planner, apps,
+                                  placement=planner.plan(apps),
+                                  tick_s=TICK_S)
+            loop = ControlLoop(
+                router, [req(f"r{i:03d}", i) for i in range(40)],
+                controller=ctl,
+                injector=FaultInjector([Fault(kind="kill", endpoint="hot0",
+                                              at_tick=8, until_tick=20)]),
+                tick_s=TICK_S)
+            loop.run()
+        return "\n".join(jsonl_line(r) for r in tr.records) + "\n"
+
+    a, b = run_once(), run_once()
+    assert a == b
+    # and the trace actually observed the scenario, layer by layer
+    for marker in ('"name":"route"', '"name":"tick"', '"name":"request"',
+                   '"name":"transition"', '"name":"replan"',
+                   '"name":"generation"', '"name":"plan"'):
+        assert marker in a, marker
+
+
 # ------------------------------------------------------------ wrong result
 def test_wrong_result_publishes_failure_and_replan_avoids_the_backend():
     """A wrong result is the online form of a verification failure: the

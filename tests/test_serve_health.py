@@ -163,6 +163,7 @@ def test_explicit_quarantine_and_transition_log():
     assert h.state == QUARANTINED
     tr = h.transitions[-1]
     assert tr == {"tick": 7, "from": HEALTHY, "to": QUARANTINED,
-                  "reason": "operator request"}
+                  "reason": "operator request",
+                  "observed": {"backoff_ticks": 4}}
     h.quarantine("again")                # idempotent: no new transition
     assert len(h.transitions) == 1
